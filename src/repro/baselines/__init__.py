@@ -1,0 +1,9 @@
+"""Compared schemes (paper §5.1): NoCache and NetCache [21].
+
+Both baselines share the rack simulator's clients/servers; only the switch
+policy differs.  NetCache implements the reference in-switch-memory
+architecture with its hardware item-size limits (16-byte keys, 64/128-byte
+values) — the limitation OrbitCache removes.
+"""
+from .netcache import NetCacheState, init_netcache, netcache_step, netcache_install  # noqa: F401
+from .nocache import nocache_step  # noqa: F401

@@ -1,0 +1,207 @@
+"""NetCache [21] baseline: hot items stored *in switch memory* (paper §2.1).
+
+Faithful to the reference architecture and its hardware limits:
+
+* the cache lookup table is an exact-match table on the item key — the
+  match-key width caps keys at 16 bytes;
+* values live across match-action stages — value size is capped at
+  ``value_limit`` bytes (the paper's own NetCache prototype served 64 B
+  across 8 stages; 128 B is the architectural best case);
+* hits are answered directly by the switch at line rate;
+* write-through invalidation like OrbitCache (NetCache §Cache coherence).
+
+Items whose key or value exceeds the limits are *uncacheable* — the
+controller refuses to install them.  That refusal is the paper's whole
+motivation.
+
+The lookup table here is a 2-probe direct-indexed hash table (O(1) per
+packet at 10K entries, vs the O(C) associative scan that is fine for
+OrbitCache's ~128 entries).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.hashing import fold_hash, hash128_u32_np
+from repro.core.types import (
+    OP_CRN_REQ,
+    OP_F_REP,
+    OP_F_REQ,
+    OP_R_REP,
+    OP_R_REQ,
+    OP_W_REP,
+    OP_W_REQ,
+    ROUTE_CLIENT,
+    ROUTE_DROP,
+    ROUTE_SERVER,
+    HKEY_LANES,
+    PacketBatch,
+)
+
+N_PROBES = 2
+
+
+class NetCacheState(NamedTuple):
+    hkeys: jnp.ndarray     # uint32[T, 4]
+    occupied: jnp.ndarray  # bool[T]
+    kidx: jnp.ndarray      # int32[T]
+    valid: jnp.ndarray     # bool[T]
+    val: jnp.ndarray       # uint8[T, value_limit]
+    vlen: jnp.ndarray      # int32[T]
+    hits: jnp.ndarray      # int32[]
+    version: jnp.ndarray   # int32[T]
+
+
+def init_netcache(table_size: int, value_limit: int) -> NetCacheState:
+    t = table_size
+    return NetCacheState(
+        hkeys=jnp.zeros((t, HKEY_LANES), jnp.uint32),
+        occupied=jnp.zeros((t,), bool),
+        kidx=jnp.full((t,), -1, jnp.int32),
+        valid=jnp.zeros((t,), bool),
+        val=jnp.zeros((t, value_limit), jnp.uint8),
+        vlen=jnp.zeros((t,), jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        version=jnp.zeros((t,), jnp.int32),
+    )
+
+
+def _probe_slots(hkey: jnp.ndarray, table_size: int) -> jnp.ndarray:
+    """[B, N_PROBES] candidate slots."""
+    return jnp.stack(
+        [fold_hash(hkey, table_size, salt=100 + p) for p in range(N_PROBES)],
+        axis=-1,
+    )
+
+
+def _match(st: NetCacheState, hkey: jnp.ndarray) -> jnp.ndarray:
+    """int32[B] slot or -1."""
+    slots = _probe_slots(hkey, st.occupied.shape[0])          # [B, P]
+    eq = jnp.all(st.hkeys[slots] == hkey[:, None, :], axis=-1) & st.occupied[slots]
+    hit = jnp.any(eq, axis=-1)
+    which = jnp.argmax(eq, axis=-1)
+    slot = jnp.take_along_axis(slots, which[:, None], axis=1)[:, 0]
+    return jnp.where(hit, slot, -1)
+
+
+def netcache_step(st: NetCacheState, pkts: PacketBatch):
+    """One batch through the NetCache data plane.
+
+    Returns (state, route, flag, switch_reply_mask, hit_count):
+    ``switch_reply_mask`` marks R-REQ lanes answered by the switch.
+    """
+    op, valid = pkts.op, pkts.valid
+    slot = _match(st, pkts.hkey)
+    hit = (slot >= 0) & valid
+    safe = jnp.where(hit, slot, 0)
+
+    r_req = valid & (op == OP_R_REQ)
+    w_req = valid & (op == OP_W_REQ)
+    r_rep = valid & (op == OP_R_REP)
+    w_rep = valid & (op == OP_W_REP)
+    f_rep = valid & (op == OP_F_REP)
+    passthru = valid & ((op == OP_CRN_REQ) | (op == OP_F_REQ))
+
+    entry_valid = st.valid[safe] & hit
+    switch_reply = r_req & hit & entry_valid
+    n_hit = jnp.sum(switch_reply.astype(jnp.int32))
+
+    # writes invalidate, then write-through to the server (FLAG=1 if cached)
+    w_cached = w_req & hit
+    t = st.occupied.shape[0]
+    widx = jnp.where(w_cached, slot, t)
+    valid_arr = st.valid.at[widx].set(False, mode='drop')
+    version = st.version.at[widx].add(1, mode='drop')
+    flag = jnp.where(w_cached, jnp.int32(1), pkts.flag)
+
+    # write/fetch replies refresh the stored value
+    install = (w_rep | f_rep) & hit & (pkts.flag >= 1)
+    iidx = jnp.where(install, slot, t)
+    limit = st.val.shape[1]
+    valid_arr = valid_arr.at[iidx].set(True, mode='drop')
+    val = st.val.at[iidx].set(pkts.val[:, :limit], mode='drop')
+    vlen = st.vlen.at[iidx].set(jnp.minimum(pkts.vlen, limit), mode='drop')
+
+    route = jnp.full(pkts.width, ROUTE_DROP, jnp.int32)
+    to_server = (r_req & ~switch_reply) | w_req | passthru
+    to_client = r_rep | w_rep | switch_reply
+    route = jnp.where(to_server, ROUTE_SERVER, route)
+    route = jnp.where(to_client, ROUTE_CLIENT, route)
+
+    st2 = st._replace(
+        valid=valid_arr, version=version, val=val, vlen=vlen,
+        hits=st.hits + n_hit,
+    )
+    return st2, route, flag, switch_reply, n_hit
+
+
+def netcache_install(
+    st: NetCacheState,
+    keys: np.ndarray,
+    vlens: np.ndarray,
+    key_size: int,
+    value_limit: int,
+    key_limit: int = 16,
+) -> tuple[NetCacheState, int]:
+    """Controller-side preload: install the cacheable subset of ``keys``.
+
+    Enforces the hardware limits: keys longer than ``key_limit`` bytes or
+    values longer than ``value_limit`` bytes are refused (the paper's
+    motivation: most Twitter/Facebook items exceed these).  Returns the
+    number actually installed.  Values are marked invalid until fetched
+    (simulated fetch: installed valid with version-0 synthetic bytes, as the
+    paper's evaluation preloads the cache before measuring).
+    """
+    from repro.kvstore.store import synth_value_np
+
+    t = st.occupied.shape[0]
+    hk_all = st.hkeys if isinstance(st.hkeys, np.ndarray) else np.asarray(st.hkeys)
+    hkeys, occupied = hk_all.copy(), np.asarray(st.occupied).copy()
+    kidx = np.asarray(st.kidx).copy()
+    valid = np.asarray(st.valid).copy()
+    val = np.asarray(st.val).copy()
+    vlen_arr = np.asarray(st.vlen).copy()
+
+    installed = 0
+    for k, vl in zip(np.asarray(keys), np.asarray(vlens)):
+        if key_size > key_limit or vl > value_limit:
+            continue  # uncacheable under NetCache's hardware limits
+        hk = hash128_u32_np(np.int32(k))
+        placed = False
+        for p in range(N_PROBES):
+            # host-side twin of fold_hash
+            s = int(_fold_np(hk, t, salt=100 + p))
+            if not occupied[s] or kidx[s] == k:
+                hkeys[s] = hk
+                occupied[s] = True
+                kidx[s] = k
+                valid[s] = True
+                v = synth_value_np(int(k), 0, val.shape[1])
+                val[s] = np.where(np.arange(val.shape[1]) < vl, v, 0)
+                vlen_arr[s] = vl
+                placed = True
+                break
+        installed += int(placed)
+    return st._replace(
+        hkeys=jnp.asarray(hkeys), occupied=jnp.asarray(occupied),
+        kidx=jnp.asarray(kidx), valid=jnp.asarray(valid),
+        val=jnp.asarray(val), vlen=jnp.asarray(vlen_arr),
+    ), installed
+
+
+def _fold_np(hkey: np.ndarray, width: int, salt: int) -> np.int32:
+    def sm(x: int) -> int:
+        x &= 0xFFFFFFFF
+        x ^= x >> 16
+        x = (x * 0x7FEB352D) & 0xFFFFFFFF
+        x ^= x >> 15
+        x = (x * 0x846CA68B) & 0xFFFFFFFF
+        x ^= x >> 16
+        return x
+    h = sm(int(hkey[0]) ^ ((salt * 0x9E3779B9 + 0x85EBCA6B) & 0xFFFFFFFF))
+    h = h ^ int(hkey[1]) ^ (int(hkey[2]) >> 7) ^ ((int(hkey[3]) << 3) & 0xFFFFFFFF)
+    return np.int32(sm(h) % width)

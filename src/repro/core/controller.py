@@ -1,0 +1,186 @@
+"""The switch control plane (paper §3.1, §3.8, §3.10).
+
+The controller is software (the paper's runs in Python on the switch CPU;
+ours runs on the host between jitted dataplane windows).  Responsibilities:
+
+* **Cache updates** — merge the data plane's per-key popularity counters
+  (cached keys) with the storage servers' top-k reports (uncached keys),
+  keep the ``active_size`` most popular keys, evict the rest, and issue
+  F-REQ fetches for newly inserted keys.  A new key *inherits the CacheIdx
+  of the key it evicts* (paper §3.8) — pending requests queued under that
+  index are served by the new cache packet and cleaned up by client-side
+  collision resolution.
+* **Counter reset** — popularity counters are read-and-reset each period so
+  they reflect only the recent window.
+* **Dynamic cache sizing** (§3.10) — compare the overflow-request ratio
+  against a threshold (default 1%) and shrink/grow ``active_size`` within
+  ``[min_size, max_size]``.
+
+All state surgery is done host-side in numpy (control-plane rates are
+orders of magnitude below dataplane rates, as in the real system).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .hashing import hash128_u32_np
+from .types import SwitchState
+
+
+@dataclass
+class ControllerConfig:
+    active_size: int = 128          # current #cached keys (<= lookup capacity)
+    min_size: int = 32
+    max_size: int = 512
+    size_step: int = 32
+    overflow_threshold: float = 0.01  # paper §3.10: e.g. 1%
+    dynamic_sizing: bool = False
+    k_report: int = 64              # top-k keys per server report
+
+
+@dataclass
+class UpdateInfo:
+    evicted: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    inserted: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    fetches: list[tuple[int, int]] = field(default_factory=list)  # (kidx, cidx)
+    overflow_ratio: float = 0.0
+    active_size: int = 0
+
+
+class CacheController:
+    """Host-side cache-update controller."""
+
+    def __init__(self, cfg: ControllerConfig):
+        self.cfg = cfg
+        self.active_size = cfg.active_size
+
+    # -- cache sizing -------------------------------------------------------
+    def resize(self, overflow: int, cached_reqs: int) -> float:
+        """§3.10 dynamic sizing from the overflow-request ratio."""
+        ratio = overflow / max(cached_reqs, 1)
+        if self.cfg.dynamic_sizing:
+            if ratio > self.cfg.overflow_threshold:
+                self.active_size = max(self.cfg.min_size,
+                                       self.active_size - self.cfg.size_step)
+            else:
+                self.active_size = min(self.cfg.max_size,
+                                       self.active_size + self.cfg.size_step)
+        return ratio
+
+    # -- cache update -------------------------------------------------------
+    def update(
+        self,
+        sw: SwitchState,
+        reports: list[tuple[np.ndarray, np.ndarray]],
+        overflow: int = 0,
+        cached_reqs: int = 0,
+    ) -> tuple[SwitchState, UpdateInfo]:
+        """One control-plane period: merge popularity, evict/insert.
+
+        Args:
+          sw: switch state (device).
+          reports: per-server (top_kidx, est_count) arrays for uncached keys.
+          overflow/cached_reqs: period counts for dynamic sizing.
+
+        Returns the updated switch state and an UpdateInfo whose ``fetches``
+        must be turned into F-REQ packets by the caller (value fetching goes
+        through the data plane, §3.1).
+        """
+        ratio = self.resize(overflow, cached_reqs)
+        cap = sw.lookup.occupied.shape[0]
+        active = min(self.active_size, cap)
+
+        occ = np.asarray(sw.lookup.occupied)
+        cached_kidx = np.asarray(sw.lookup.kidx)
+        pop = np.asarray(sw.counters.popularity)
+
+        # Merge cached counts and server-reported candidates.
+        scores: dict[int, int] = {}
+        for c in range(cap):
+            if occ[c]:
+                scores[int(cached_kidx[c])] = int(pop[c])
+        for top_k, top_e in reports:
+            for k, e in zip(np.asarray(top_k), np.asarray(top_e)):
+                k = int(k)
+                if k >= 0 and k not in scores:
+                    scores[k] = int(e)
+
+        desired = sorted(scores, key=lambda k: -scores[k])[:active]
+        desired_set = set(desired)
+        current = {int(cached_kidx[c]): c for c in range(cap) if occ[c]}
+
+        # Shrink falls out naturally: ``desired`` has at most ``active``
+        # entries, so excess currently-cached keys are evicted.
+        evict = [c for k, c in current.items() if k not in desired_set]
+        new_keys = [k for k in desired if k not in current]
+
+        free = [c for c in range(cap) if not occ[c]]
+        slots = evict + free  # inherit evicted CacheIdx first (paper §3.8)
+
+        hkeys = np.asarray(sw.lookup.hkeys).copy()
+        occupied = occ.copy()
+        kidx_arr = cached_kidx.copy()
+        valid = np.asarray(sw.state.valid).copy()
+        version = np.asarray(sw.state.version).copy()
+        live = np.asarray(sw.orbit.live).copy()
+        f = sw.orbit.max_frags
+
+        fetches: list[tuple[int, int]] = []
+        inserted = []
+        evicted_keys = [int(cached_kidx[c]) for c in evict]
+        used = 0
+        for k in new_keys:
+            if used >= len(slots):
+                break
+            c = slots[used]
+            used += 1
+            hkeys[c] = hash128_u32_np(np.int32(k))
+            occupied[c] = True
+            kidx_arr[c] = k
+            valid[c] = False          # invalid until the F-REP arrives
+            version[c] += 1           # stale lines (old key) must drop
+            live[c * f:(c + 1) * f] = False
+            fetches.append((int(k), int(c)))
+            inserted.append(int(k))
+        # Slots evicted but not reused are simply vacated.
+        for c in evict[used:]:
+            occupied[c] = False
+            kidx_arr[c] = -1
+            valid[c] = False
+            version[c] += 1
+            live[c * f:(c + 1) * f] = False
+
+        sw2 = sw._replace(
+            lookup=sw.lookup._replace(
+                hkeys=jnp.asarray(hkeys),
+                occupied=jnp.asarray(occupied),
+                kidx=jnp.asarray(kidx_arr),
+            ),
+            state=sw.state._replace(
+                valid=jnp.asarray(valid), version=jnp.asarray(version)
+            ),
+            orbit=sw.orbit._replace(live=jnp.asarray(live)),
+            counters=sw.counters._replace(
+                popularity=jnp.zeros_like(sw.counters.popularity)
+            ),
+        )
+        info = UpdateInfo(
+            evicted=np.asarray(evicted_keys, np.int32),
+            inserted=np.asarray(inserted, np.int32),
+            fetches=fetches,
+            overflow_ratio=ratio,
+            active_size=self.active_size,
+        )
+        return sw2, info
+
+    # -- bootstrap ----------------------------------------------------------
+    def preload(self, sw: SwitchState, keys: np.ndarray) -> tuple[SwitchState, list[tuple[int, int]]]:
+        """Install an initial hot set (benchmarks preload the hottest keys,
+        like the paper's evaluation).  Returns fetches for value loading."""
+        reports = [(np.asarray(keys, np.int32), np.full(len(keys), 1 << 20, np.int32))]
+        sw2, info = self.update(sw, reports)
+        return sw2, info.fetches

@@ -1,0 +1,106 @@
+"""128-bit key hashing (paper §3.6: fixed-size key hash as the match key).
+
+Two twin implementations that produce bit-identical results:
+
+* ``hash128_u32`` — vectorized jnp version hashing a key *identity* (int32),
+  used by the jitted dataplane and synthetic workloads.
+* ``hash128_bytes_np`` — numpy version hashing real variable-length key
+  bytes (FNV-1a per lane + SplitMix finalizer), used by the byte-level
+  store.  ``hash128_u32`` is defined as hashing the 4-byte little-endian
+  encoding of the identity through the same byte pipeline, so both paths
+  agree (property-tested in ``tests/test_hashing.py``).
+
+The paper uses a 128-bit hash so that collisions are rare enough to be
+handled client-side; we keep the same width as 4 uint32 lanes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# FNV-1a 32-bit constants; one distinct offset basis per lane.
+_FNV_PRIME = np.uint32(16777619)
+_LANE_BASIS = np.array(
+    [2166136261, 2166136261 ^ 0x5BD1E995, 2166136261 ^ 0x9E3779B9, 2166136261 ^ 0x85EBCA6B],
+    dtype=np.uint32,
+)
+
+# SplitMix32 finalizer constants.
+_SM1 = np.uint32(0x7FEB352D)
+_SM2 = np.uint32(0x846CA68B)
+
+
+def _splitmix32_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * _SM1).astype(np.uint32)
+    x ^= x >> np.uint32(15)
+    x = (x * _SM2).astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def _splitmix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash128_bytes_np(key: bytes | np.ndarray) -> np.ndarray:
+    """Hash variable-length key bytes -> uint32[4] (128 bits)."""
+    data = np.frombuffer(bytes(key), dtype=np.uint8) if isinstance(key, (bytes, bytearray)) else np.asarray(key, np.uint8)
+    lanes = _LANE_BASIS.copy()
+    for b in data:
+        lanes = ((lanes ^ np.uint32(b)) * _FNV_PRIME).astype(np.uint32)
+    return _splitmix32_np(lanes)
+
+
+def hash128_u32(kidx: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized: int32[...,] key identities -> uint32[..., 4] hashes.
+
+    Equivalent to ``hash128_bytes_np(kidx.to_bytes(4, 'little'))``.
+    """
+    k = kidx.astype(jnp.uint32)
+    b = jnp.stack([(k >> (8 * i)) & 0xFF for i in range(4)], axis=-1)  # [..., 4] bytes
+    lanes = jnp.broadcast_to(
+        jnp.asarray(_LANE_BASIS, jnp.uint32), k.shape + (4,)
+    )
+    prime = jnp.uint32(16777619)
+    for i in range(4):
+        lanes = (lanes ^ b[..., i : i + 1].astype(jnp.uint32)) * prime
+    return _splitmix32_jnp(lanes)
+
+
+def hash128_u32_np(kidx: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``hash128_u32`` (vectorized over key identities)."""
+    k = np.asarray(kidx).astype(np.uint32)
+    lanes = np.broadcast_to(_LANE_BASIS, k.shape + (4,)).copy()
+    for i in range(4):
+        byte = ((k >> np.uint32(8 * i)) & np.uint32(0xFF)).astype(np.uint32)
+        lanes = ((lanes ^ byte[..., None]) * _FNV_PRIME).astype(np.uint32)
+    return _splitmix32_np(lanes)
+
+
+def fold_hash(hkey: jnp.ndarray, width: int, salt: int = 0) -> jnp.ndarray:
+    """Fold a 128-bit hash into an index in [0, width) (for sketches etc.)."""
+    salt32 = (salt * 0x9E3779B9 + 0x85EBCA6B) & 0xFFFFFFFF
+    h = _splitmix32_jnp(hkey[..., 0] ^ jnp.uint32(salt32))
+    h = h ^ hkey[..., 1] ^ (hkey[..., 2] >> 7) ^ (hkey[..., 3] << 3)
+    h = _splitmix32_jnp(h)
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+def server_of_key(kidx: jnp.ndarray, num_servers: int) -> jnp.ndarray:
+    """Hash-partition owner of a key (clients hash the key to pick a server)."""
+    return (_splitmix32_jnp(kidx.astype(jnp.uint32) ^ jnp.uint32(0xCAFE01)) %
+            jnp.uint32(num_servers)).astype(jnp.int32)
+
+
+def server_of_key_np(kidx: np.ndarray, num_servers: int) -> np.ndarray:
+    x = np.asarray(kidx).astype(np.uint32) ^ np.uint32(0xCAFE01)
+    return (_splitmix32_np(x) % np.uint32(num_servers)).astype(np.int32)

@@ -1,0 +1,51 @@
+"""Cache lookup (paper §3.1): 128-bit key hash -> CacheIdx, associative match.
+
+The hardware realizes this as a match-action table; here it is a vectorized
+exact-match over the ``C`` installed entries.  ``C`` is small (the paper's
+effective cache size is 32–512 — small cache effect), so an associative
+compare is both faithful and cheap; the Pallas kernel
+``repro.kernels.orbit_serve`` fuses this match with request-table access for
+the TPU hot path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import LookupTable
+
+
+def lookup(table: LookupTable, hkey: jnp.ndarray) -> jnp.ndarray:
+    """Match a batch of hashes against the table.
+
+    Args:
+      table: the lookup table (C entries).
+      hkey: uint32[B, 4] key hashes.
+
+    Returns:
+      int32[B] CacheIdx, or -1 on miss.
+    """
+    # [B, C]: full 128-bit equality against every installed entry.
+    eq = jnp.all(hkey[:, None, :] == table.hkeys[None, :, :], axis=-1)
+    eq = eq & table.occupied[None, :]
+    hit = jnp.any(eq, axis=-1)
+    cidx = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    return jnp.where(hit, cidx, jnp.int32(-1))
+
+
+def install(table: LookupTable, cidx: jnp.ndarray, hkey: jnp.ndarray,
+            kidx: jnp.ndarray) -> LookupTable:
+    """Install entry ``cidx`` <- key (controller-side; vectorized over cidx)."""
+    return LookupTable(
+        hkeys=table.hkeys.at[cidx].set(hkey),
+        occupied=table.occupied.at[cidx].set(True),
+        kidx=table.kidx.at[cidx].set(kidx),
+    )
+
+
+def evict(table: LookupTable, cidx: jnp.ndarray) -> LookupTable:
+    """Remove entry ``cidx`` (controller-side)."""
+    return LookupTable(
+        hkeys=table.hkeys.at[cidx].set(jnp.zeros_like(table.hkeys[0])),
+        occupied=table.occupied.at[cidx].set(False),
+        kidx=table.kidx.at[cidx].set(-1),
+    )

@@ -1,0 +1,144 @@
+"""The orbit: circulating cache packets (paper §2.2, §3.5, §3.7).
+
+A window of simulated time gives every live orbit line a *pass budget* —
+how many times it traverses the data plane (recirculation port bandwidth
+divided among live lines; this scarcity is the paper's cache-size trade-off
+and is what makes Fig. 16 saturate).  Each pass over an entry with pending
+requests serves the front request and, by PRE cloning, the line keeps
+circulating — so a line serves up to ``min(qlen, passes)`` requests per
+window.
+
+Stale lines (entry evicted, or version behind the state table because a
+write invalidated it) are dropped before they can touch the request table
+(paper §3.7) — reads can never observe a stale value.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import request_table as rt
+from .types import OrbitBuffer, SwitchState
+
+
+class ServeGrid(NamedTuple):
+    """Requests served by orbit lines this pass: dense [C, J] grid."""
+
+    served: jnp.ndarray   # bool[C, J]
+    client: jnp.ndarray   # int32[C, J]
+    seq: jnp.ndarray      # int32[C, J]
+    port: jnp.ndarray     # int32[C, J]
+    ts: jnp.ndarray       # float32[C, J] request submit time
+    order: jnp.ndarray    # int32[C, J] serve order within window (latency model)
+    kidx: jnp.ndarray     # int32[C]  key carried by the serving line (frag 0)
+    vlen: jnp.ndarray     # int32[C]  total value bytes for the entry
+    version: jnp.ndarray  # int32[C]
+
+
+def refresh_liveness(sw: SwitchState) -> OrbitBuffer:
+    """Drop-stale rule: live &= occupied & valid & version-current."""
+    orbit = sw.orbit
+    f = orbit.max_frags
+    c = sw.lookup.occupied.shape[0]
+    ent = jnp.repeat(jnp.arange(c), f)  # entry of each line
+    ok = (
+        sw.lookup.occupied[ent]
+        & sw.state.valid[ent]
+        & (orbit.version == sw.state.version[ent])
+        & orbit.live
+    )
+    return orbit._replace(live=ok)
+
+
+def live_line_count(orbit: OrbitBuffer) -> jnp.ndarray:
+    return jnp.sum(orbit.live.astype(jnp.int32))
+
+
+def pass_budget(orbit: OrbitBuffer, recirc_packets: jnp.ndarray) -> jnp.ndarray:
+    """Per-entry serve budget for a window.
+
+    ``recirc_packets`` — total packets the recirculation port can cycle this
+    window (port bandwidth x window / mean line size).  Divided evenly among
+    live lines; an entry can only serve when *all* its fragments are live
+    (§3.10 — a request needs every fragment).
+    """
+    c = orbit.frags.shape[0]
+    f = orbit.max_frags
+    live = orbit.live.reshape(c, f)
+    n_live = jnp.maximum(live_line_count(orbit), 1)
+    per_line = recirc_packets // n_live
+    live_frag_count = jnp.sum(live.astype(jnp.int32), axis=1)
+    complete = live_frag_count >= orbit.frags
+    return jnp.where(complete, per_line, 0).astype(jnp.int32)
+
+
+def orbit_pass(sw: SwitchState, recirc_packets: jnp.ndarray, max_serves: int,
+               ) -> tuple[SwitchState, ServeGrid]:
+    """One serving round: refresh liveness, serve pending requests, pop them."""
+    orbit = refresh_liveness(sw)
+    budget = pass_budget(orbit, recirc_packets)
+    deq = rt.peek_front(sw.reqtab, budget, max_serves)
+    n_served = jnp.sum(deq.served.astype(jnp.int32), axis=1)
+    reqtab = rt.pop(sw.reqtab, n_served)
+
+    c = orbit.frags.shape[0]
+    f = orbit.max_frags
+    first = jnp.arange(c) * f  # fragment-0 line per entry
+    vlen_total = jnp.sum(orbit.vlen.reshape(c, f), axis=1)
+    grid = ServeGrid(
+        served=deq.served,
+        client=deq.client,
+        seq=deq.seq,
+        port=deq.port,
+        ts=deq.ts,
+        order=jnp.broadcast_to(jnp.arange(max_serves, dtype=jnp.int32)[None, :],
+                               deq.served.shape),
+        kidx=orbit.kidx[first],
+        vlen=vlen_total,
+        version=orbit.version[first],
+    )
+    return sw._replace(orbit=orbit, reqtab=reqtab), grid
+
+
+def install_lines(
+    orbit: OrbitBuffer,
+    cidx: jnp.ndarray,     # int32[B] target entry per reply packet
+    mask: jnp.ndarray,     # bool[B]  install this packet's value
+    kidx: jnp.ndarray,     # int32[B]
+    version: jnp.ndarray,  # int32[B] entry version at install time
+    vlen: jnp.ndarray,     # int32[B]
+    val: jnp.ndarray,      # uint8[B, value_pad]
+    frag: jnp.ndarray | None = None,   # int32[B] fragment number (default 0)
+    n_frags: jnp.ndarray | None = None,  # int32[B] total fragments (default 1)
+) -> OrbitBuffer:
+    """Install fresh cache packets (W-REP / F-REP with FLAG, paper §3.3(d)).
+
+    The switch "clones" the reply: the original goes to the client (handled
+    by the caller's routing) and the clone becomes the orbit line — here the
+    clone is a functional scatter into the orbit buffer.
+    """
+    c = orbit.frags.shape[0]
+    f = orbit.max_frags
+    if frag is None:
+        frag = jnp.zeros_like(cidx)
+    if n_frags is None:
+        n_frags = jnp.ones_like(cidx)
+    line = cidx * f + jnp.clip(frag, 0, f - 1)
+    idx = jnp.where(mask, line, c * f)  # drop non-installs
+    ent_idx = jnp.where(mask & (frag == 0), cidx, c)
+    return OrbitBuffer(
+        live=orbit.live.at[idx].set(True, mode='drop'),
+        kidx=orbit.kidx.at[idx].set(kidx, mode='drop'),
+        version=orbit.version.at[idx].set(version, mode='drop'),
+        vlen=orbit.vlen.at[idx].set(vlen, mode='drop'),
+        val=orbit.val.at[idx].set(val, mode='drop'),
+        frags=orbit.frags.at[ent_idx].set(jnp.maximum(n_frags, 1), mode='drop'),
+    )
+
+
+def evict_lines(orbit: OrbitBuffer, cidx: jnp.ndarray) -> OrbitBuffer:
+    """Kill all fragment lines of the given entries (controller eviction)."""
+    f = orbit.max_frags
+    lines = (cidx[:, None] * f + jnp.arange(f)[None, :]).reshape(-1)
+    return orbit._replace(live=orbit.live.at[lines].set(False, mode='drop'))

@@ -1,0 +1,142 @@
+"""Circular-queue request table (paper §3.4).
+
+Register-array layout exactly as the paper: metadata arrays indexed by
+``ReqIdx = CacheIdx * S + i`` and pointer arrays (qlen / front / rear)
+indexed by ``CacheIdx``.  Queues for different keys never collide — the
+indexing formula partitions the arrays (isolation property, property-tested).
+
+The one JAX-specific piece is *batched* enqueue: the switch pipeline
+serializes packets, so two same-key requests in one batch must land in
+consecutive slots.  We emulate the serialization with a per-key running
+count (exclusive cumulative sum of the one-hot key matrix), which assigns
+packet ``i`` the offset "number of earlier same-key enqueues in this batch".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .types import RequestTable
+
+
+class EnqueueResult(NamedTuple):
+    table: RequestTable
+    accepted: jnp.ndarray   # bool[B] — stored in the table
+    overflow: jnp.ndarray   # bool[B] — cached key but queue full (to server)
+
+
+def enqueue(
+    table: RequestTable,
+    cidx: jnp.ndarray,      # int32[B] cache index per packet (-1 = not enqueueing)
+    want: jnp.ndarray,      # bool[B]  packet wants a slot
+    client: jnp.ndarray,    # int32[B]
+    seq: jnp.ndarray,       # int32[B]
+    port: jnp.ndarray,      # int32[B]
+    ts: jnp.ndarray,        # float32[B]
+) -> EnqueueResult:
+    """Vectorized multi-enqueue of one packet batch."""
+    c_entries = table.num_entries
+    s = table.queue_size
+    safe_cidx = jnp.where(want, cidx, 0)
+
+    # one-hot [B, C] of enqueue attempts; exclusive cumsum gives each packet
+    # its arrival order among same-key packets in this batch.
+    onehot = (safe_cidx[:, None] == jnp.arange(c_entries)[None, :]) & want[:, None]
+    prior = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    offset = jnp.take_along_axis(prior, safe_cidx[:, None], axis=1)[:, 0]
+
+    free = s - table.qlen  # int32[C]
+    free_i = free[safe_cidx]
+    accepted = want & (offset < free_i)
+    overflow = want & ~accepted
+
+    slot = (table.rear[safe_cidx] + offset) % s
+    flat = safe_cidx * s + slot
+    # Scatter metadata for accepted packets only.  Rejected packets are
+    # routed to an out-of-range index and dropped by the scatter — a
+    # rejected packet's wrapped slot could otherwise collide with an
+    # accepted packet's slot and clobber it nondeterministically.
+    flat_w = jnp.where(accepted, flat, c_entries * s)
+    def put(arr, val):
+        return arr.at[flat_w].set(val, mode='drop')
+
+    new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
+    table2 = RequestTable(
+        client=put(table.client, client),
+        seq=put(table.seq, seq),
+        port=put(table.port, port),
+        ts=put(table.ts, ts),
+        acked=put(table.acked, jnp.zeros_like(seq)),
+        qlen=table.qlen + new_counts,
+        front=table.front,
+        rear=(table.rear + new_counts) % s,
+    )
+    return EnqueueResult(table2, accepted, overflow)
+
+
+class DequeueResult(NamedTuple):
+    table: RequestTable
+    # Per (entry, j) served request metadata, j in [0, max_serves):
+    served: jnp.ndarray   # bool[C, J]
+    client: jnp.ndarray   # int32[C, J]
+    seq: jnp.ndarray      # int32[C, J]
+    port: jnp.ndarray     # int32[C, J]
+    ts: jnp.ndarray       # float32[C, J]
+
+
+def peek_front(table: RequestTable, budget: jnp.ndarray, max_serves: int,
+               ) -> DequeueResult:
+    """Read (but do not remove) up to ``min(qlen, budget)`` front items per key.
+
+    ``budget`` is int32[C]: how many serves each key's orbit line can make
+    this window (its recirculation passes).  Removal is a separate step
+    (``pop``) so multi-fragment items can delay it via the ACK counter
+    (paper §3.10).
+    """
+    c_entries, s = table.num_entries, table.queue_size
+    j = jnp.arange(max_serves)[None, :]                       # [1, J]
+    n_serve = jnp.minimum(table.qlen, budget)                 # [C]
+    served = j < n_serve[:, None]                             # [C, J]
+    slot = (table.front[:, None] + j) % s                     # [C, J]
+    flat = jnp.arange(c_entries)[:, None] * s + slot          # [C, J]
+    return DequeueResult(
+        table=table,
+        served=served,
+        client=table.client[flat],
+        seq=table.seq[flat],
+        port=table.port[flat],
+        ts=table.ts[flat],
+    )
+
+
+def pop(table: RequestTable, n_pop: jnp.ndarray) -> RequestTable:
+    """Remove ``n_pop`` (int32[C]) items from the front of each queue."""
+    n_pop = jnp.minimum(n_pop, table.qlen)
+    return table._replace(
+        qlen=table.qlen - n_pop,
+        front=(table.front + n_pop) % table.queue_size,
+    )
+
+
+def ack_fragments(table: RequestTable, cidx_range: jnp.ndarray,
+                  frag_hits: jnp.ndarray, frags: jnp.ndarray) -> tuple[RequestTable, jnp.ndarray]:
+    """§3.10 multi-fragment ACK: bump acked counter of each key's *front*
+    slot by the number of fragment lines that served it this pass; a request
+    is ready to pop once ``acked + frag_hits >= frags``.
+
+    Args:
+      cidx_range: int32[C] (arange) — entries.
+      frag_hits: int32[C] fragments that visited the front request this window.
+      frags: int32[C] total fragments per entry.
+
+    Returns (table', ready int32[C] in {0,1}): whether the front request
+    completed.  (Single-fragment entries complete in the same pass.)
+    """
+    s = table.queue_size
+    flat_front = cidx_range * s + table.front
+    has = table.qlen > 0
+    new_acked = jnp.where(has, table.acked[flat_front] + frag_hits, 0)
+    ready = (new_acked >= frags) & has & (frag_hits > 0)
+    acked_arr = table.acked.at[flat_front].set(jnp.where(ready, 0, new_acked))
+    return table._replace(acked=acked_arr), ready.astype(jnp.int32)

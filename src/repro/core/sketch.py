@@ -1,0 +1,137 @@
+"""Count-min sketch + heavy-hitter candidates (paper §3.8).
+
+Storage servers track the popularity of *uncached* keys with a count-min
+sketch using five hash functions (paper: "a count-min sketch with five hash
+functions ... memory-efficient while ensuring accuracy") and report top-k
+keys to the controller periodically.  Counters reset after each report to
+reflect only the recent window.
+
+Top-k extraction from a CMS needs a candidate set (a sketch alone cannot
+enumerate keys).  We keep a fixed-size candidate buffer maintained SpaceSaving-
+style: each batch's keys are merged with the candidates by CMS-estimated
+count, keeping the best ``k_cand`` distinct keys.  Fully jittable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .hashing import fold_hash, hash128_u32
+
+CMS_DEPTH = 5  # five hash functions, as in the paper
+
+
+class CountMinSketch(NamedTuple):
+    counts: jnp.ndarray  # int32[CMS_DEPTH, width]
+
+    @property
+    def width(self) -> int:
+        return self.counts.shape[1]
+
+
+class CandidateSet(NamedTuple):
+    kidx: jnp.ndarray  # int32[k_cand], -1 = empty
+    est: jnp.ndarray   # int32[k_cand] CMS-estimated count
+
+
+class PopularityTracker(NamedTuple):
+    cms: CountMinSketch
+    cand: CandidateSet
+
+
+def init_tracker(width: int, k_cand: int) -> PopularityTracker:
+    return PopularityTracker(
+        cms=CountMinSketch(jnp.zeros((CMS_DEPTH, width), jnp.int32)),
+        cand=CandidateSet(
+            kidx=jnp.full((k_cand,), -1, jnp.int32),
+            est=jnp.zeros((k_cand,), jnp.int32),
+        ),
+    )
+
+
+def _rows(hkey: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Per-depth row indices for a batch of hashes: int32[B, CMS_DEPTH]."""
+    return jnp.stack([fold_hash(hkey, width, salt=d) for d in range(CMS_DEPTH)], axis=-1)
+
+
+def cms_update(cms: CountMinSketch, hkey: jnp.ndarray, mask: jnp.ndarray,
+               ) -> CountMinSketch:
+    """Increment all five rows for each masked key."""
+    w = cms.width
+    idx = _rows(hkey, w)                                   # [B, D]
+    idx = jnp.where(mask[:, None], idx, w)                 # drop unmasked
+    counts = cms.counts
+    for d in range(CMS_DEPTH):
+        counts = counts.at[d, idx[:, d]].add(1, mode='drop')
+    return CountMinSketch(counts)
+
+
+def cms_query(cms: CountMinSketch, hkey: jnp.ndarray) -> jnp.ndarray:
+    """Point estimate: min over the five rows.  int32[B]."""
+    idx = _rows(hkey, cms.width)                           # [B, D]
+    per_depth = jnp.stack(
+        [cms.counts[d, idx[:, d]] for d in range(CMS_DEPTH)], axis=-1
+    )
+    return jnp.min(per_depth, axis=-1)
+
+
+def merge_candidates(cand: CandidateSet, kidx: jnp.ndarray, est: jnp.ndarray,
+                     mask: jnp.ndarray) -> CandidateSet:
+    """Keep the best ``k_cand`` distinct keys of (candidates U batch).
+
+    Dedup by sorting on key id and masking repeats, then sort by estimate.
+    """
+    k_cand = cand.kidx.shape[0]
+    all_k = jnp.concatenate([cand.kidx, jnp.where(mask, kidx, -1)])
+    all_e = jnp.concatenate([cand.est, jnp.where(mask, est, 0)])
+    # sort by (kidx asc, est desc) so the first occurrence of each key has
+    # its best estimate; repeats are zeroed.
+    order = jnp.lexsort((-all_e, all_k))
+    sk, se = all_k[order], all_e[order]
+    first = jnp.concatenate([jnp.array([True]), sk[1:] != sk[:-1]])
+    ok = first & (sk >= 0)
+    se = jnp.where(ok, se, -1)
+    sk = jnp.where(ok, sk, -1)
+    top = jnp.argsort(-se)[:k_cand]
+    return CandidateSet(kidx=sk[top], est=jnp.where(se[top] < 0, 0, se[top]))
+
+
+def merge_candidates_hashed(cand: CandidateSet, kidx: jnp.ndarray,
+                            est: jnp.ndarray, mask: jnp.ndarray) -> CandidateSet:
+    """O(B) hashed candidate maintenance (dataplane fast path).
+
+    Each key owns a hash slot; it claims the slot when its CMS estimate
+    beats the current occupant — a SpaceSaving-flavored heavy-hitter table.
+    Hot keys win their slots with high probability; the exact lexsort merge
+    (``merge_candidates``) remains the reference (tests compare recall).
+    """
+    n = cand.kidx.shape[0]
+    h = hash128_u32(kidx)[..., 0]
+    slot = (h % jnp.uint32(n)).astype(jnp.int32)
+    slot = jnp.where(mask, slot, n)
+    # same-key re-arrivals: keep the max estimate per slot this batch
+    best = cand.est.at[slot].max(est, mode='drop')
+    won = mask & (est >= best[jnp.clip(slot, 0, n - 1)]) & (slot < n)
+    new_kidx = cand.kidx.at[jnp.where(won, slot, n)].set(kidx, mode='drop')
+    return CandidateSet(kidx=new_kidx, est=best)
+
+
+def track(tr: PopularityTracker, kidx: jnp.ndarray, mask: jnp.ndarray,
+          exact: bool = False) -> PopularityTracker:
+    """One batch of arrivals at a server: CMS update + candidate merge."""
+    hkey = hash128_u32(kidx)
+    cms = cms_update(tr.cms, hkey, mask)
+    est = cms_query(cms, hkey)
+    merge = merge_candidates if exact else merge_candidates_hashed
+    cand = merge(tr.cand, kidx, est, mask)
+    return PopularityTracker(cms, cand)
+
+
+def report_and_reset(tr: PopularityTracker, k: int,
+                     ) -> tuple[PopularityTracker, jnp.ndarray, jnp.ndarray]:
+    """Top-k report for the controller; counters reset (paper §3.8)."""
+    order = jnp.argsort(-tr.cand.est)[:k]
+    top_k, top_e = tr.cand.kidx[order], tr.cand.est[order]
+    fresh = init_tracker(tr.cms.width, tr.cand.kidx.shape[0])
+    return fresh, top_k, top_e

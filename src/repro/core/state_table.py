@@ -1,0 +1,34 @@
+"""State table (paper §3.1, §3.7): value validity + coherence versions.
+
+The paper's state is a binary valid/invalid bit per cached entry.  We add a
+monotonically increasing version per entry (bumped on every invalidation):
+orbit lines record the version they were fetched at, and a line whose
+version lags the entry's is stale and dropped on its next pass — the exact
+batched-equivalent of the paper's "drop the cache packet if the item is
+cached but its value is invalid".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import StateTable
+
+
+def invalidate(st: StateTable, cidx: jnp.ndarray, mask: jnp.ndarray) -> StateTable:
+    """Invalidate entries hit by write requests (vectorized; mask bool[B])."""
+    c = st.valid.shape[0]
+    idx = jnp.where(mask, cidx, c)  # out-of-range -> dropped
+    # version bump must count multiplicity (two writes in one batch = +2) so
+    # in-flight lines fetched between them are both stale.
+    bump = jnp.zeros_like(st.version).at[idx].add(1, mode='drop')
+    return StateTable(
+        valid=st.valid.at[idx].set(False, mode='drop'),
+        version=st.version + bump,
+    )
+
+
+def validate(st: StateTable, cidx: jnp.ndarray, mask: jnp.ndarray) -> StateTable:
+    """Re-validate entries on write/fetch replies carrying fresh values."""
+    c = st.valid.shape[0]
+    idx = jnp.where(mask, cidx, c)
+    return st._replace(valid=st.valid.at[idx].set(True, mode='drop'))

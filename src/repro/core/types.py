@@ -1,0 +1,224 @@
+"""Core data types for the OrbitCache dataplane.
+
+Everything is a flat struct-of-arrays NamedTuple so it can flow through
+``jax.jit`` / ``lax.scan`` / ``shard_map`` without custom pytree glue.
+
+The OrbitCache message header (paper §3.2) is 22 bytes:
+  OP(1) | SEQ(4) | HKEY(16) | FLAG(1)
+plus the prototype's extra fields (Cached, Latency, SrvID).  We carry the
+same information per packet, as int32/uint32 lanes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# OP codes (paper §3.2)
+# ---------------------------------------------------------------------------
+OP_R_REQ = 0    # read request
+OP_W_REQ = 1    # write request
+OP_R_REP = 2    # read reply (also the form cache packets take)
+OP_W_REP = 3    # write reply
+OP_F_REQ = 4    # fetch request (controller -> server)
+OP_F_REP = 5    # fetch reply  (server -> switch, installs a cache packet)
+OP_CRN_REQ = 6  # correction request (client-side hash-collision resolution)
+OP_NONE = 7     # invalid / empty slot
+
+# Where a packet is headed after the switch step.
+ROUTE_DROP = 0     # absorbed by the switch (metadata stored / stale orbit line)
+ROUTE_SERVER = 1   # forward to the owning storage server
+ROUTE_CLIENT = 2   # forward to the client
+
+HKEY_LANES = 4  # 4 x uint32 = 128-bit key hash (paper: 16-byte HKEY field)
+
+# Default geometry (paper prototype: request-table queue size S = 8).
+DEFAULT_QUEUE_SIZE = 8
+
+
+class PacketBatch(NamedTuple):
+    """A batch of OrbitCache messages (struct of arrays, fixed width ``B``).
+
+    ``kidx`` stands in for the variable-length key *bytes*: it is the key's
+    identity in the store, and ``hkey`` is the 128-bit hash of the real key
+    bytes (``repro.core.hashing``).  Clients compare ``kidx`` of a reply with
+    the request they issued — exactly the paper's client-side collision check
+    of requested-key vs returned-key.  ``vlen`` is the value length in bytes
+    (variable-length values are what OrbitCache exists to support).
+    """
+
+    op: jnp.ndarray        # int32[B]   OP code
+    seq: jnp.ndarray       # int32[B]   request id (SEQ)
+    hkey: jnp.ndarray      # uint32[B, HKEY_LANES]
+    flag: jnp.ndarray      # int32[B]   FLAG: cached-write marker / fragment count
+    kidx: jnp.ndarray      # int32[B]   true key identity (the "key bytes")
+    vlen: jnp.ndarray      # int32[B]   value length in bytes
+    client: jnp.ndarray    # int32[B]   client id (IP analogue)
+    port: jnp.ndarray      # int32[B]   L4 port analogue
+    server: jnp.ndarray    # int32[B]   owning storage server (hash partition)
+    ts: jnp.ndarray        # float32[B] submit timestamp, microseconds
+    valid: jnp.ndarray     # bool[B]    lane occupied
+    val: jnp.ndarray       # uint8[B, value_pad] value payload (replies)
+
+    @property
+    def width(self) -> int:
+        return self.op.shape[0]
+
+
+def empty_batch(width: int, value_pad: int = 1438) -> PacketBatch:
+    return PacketBatch(
+        op=jnp.full((width,), OP_NONE, jnp.int32),
+        seq=jnp.zeros((width,), jnp.int32),
+        hkey=jnp.zeros((width, HKEY_LANES), jnp.uint32),
+        flag=jnp.zeros((width,), jnp.int32),
+        kidx=jnp.full((width,), -1, jnp.int32),
+        vlen=jnp.zeros((width,), jnp.int32),
+        client=jnp.full((width,), -1, jnp.int32),
+        port=jnp.zeros((width,), jnp.int32),
+        server=jnp.full((width,), -1, jnp.int32),
+        ts=jnp.zeros((width,), jnp.float32),
+        valid=jnp.zeros((width,), bool),
+        val=jnp.zeros((width, value_pad), jnp.uint8),
+    )
+
+
+class LookupTable(NamedTuple):
+    """Match-action cache lookup table (paper §3.1): 128-bit hash -> CacheIdx.
+
+    Associative exact-match over ``C`` entries — the JAX analogue of the
+    switch's match-action table.  ``occupied`` marks installed entries;
+    ``kidx`` records which real key the entry was installed for (used by the
+    controller and by tests; the dataplane itself matches only on ``hkey``,
+    like the hardware).
+    """
+
+    hkeys: jnp.ndarray     # uint32[C, HKEY_LANES]
+    occupied: jnp.ndarray  # bool[C]
+    kidx: jnp.ndarray      # int32[C]
+
+
+class StateTable(NamedTuple):
+    """Value-validity state (paper §3.1 "state table") + version numbers.
+
+    ``valid`` is the paper's binary valid/invalid bit.  ``version`` is a
+    beyond-paper extension: it makes dropping stale orbit lines exact under
+    batched concurrent writes (the paper gets the same effect from the drop-
+    if-invalid rule because hardware serializes packets).
+    """
+
+    valid: jnp.ndarray    # bool[C]
+    version: jnp.ndarray  # int32[C]
+
+
+class RequestTable(NamedTuple):
+    """Circular-queue request table (paper §3.4).
+
+    Six register arrays, exactly as in the paper: three metadata arrays
+    indexed by ``ReqIdx = CacheIdx * S + i`` and three queue-management
+    arrays indexed by ``CacheIdx``; plus the prototype's timestamp array and
+    the §3.10 ACKed-fragment counter.
+    """
+
+    client: jnp.ndarray  # int32[C * S]
+    seq: jnp.ndarray     # int32[C * S]
+    port: jnp.ndarray    # int32[C * S]
+    ts: jnp.ndarray      # float32[C * S] (prototype's latency register)
+    acked: jnp.ndarray   # int32[C * S]  (§3.10 multi-fragment ACK counter)
+    qlen: jnp.ndarray    # int32[C]
+    front: jnp.ndarray   # int32[C]
+    rear: jnp.ndarray    # int32[C]
+
+    @property
+    def num_entries(self) -> int:
+        return self.qlen.shape[0]
+
+    @property
+    def queue_size(self) -> int:
+        return self.client.shape[0] // self.qlen.shape[0]
+
+
+class OrbitBuffer(NamedTuple):
+    """The circulating cache packets (paper §2.2 / §3.5).
+
+    One logical orbit line per (cache entry, fragment).  Arrays are laid out
+    ``[C * F]`` where ``F = max_frags``; line ``c * F + f`` carries fragment
+    ``f`` of entry ``c``.  ``val`` holds the actual value bytes (cache packets
+    carry both key and value — that is the whole point of the paper), padded
+    to ``value_pad`` bytes per fragment.
+    """
+
+    live: jnp.ndarray      # bool[C * F]
+    kidx: jnp.ndarray      # int32[C * F]  key carried (for client-side check)
+    version: jnp.ndarray   # int32[C * F]  store version when fetched
+    vlen: jnp.ndarray      # int32[C * F]  bytes of value in this fragment
+    val: jnp.ndarray       # uint8[C * F, value_pad]
+    frags: jnp.ndarray     # int32[C]      fragment count per entry (FLAG)
+
+    @property
+    def max_frags(self) -> int:
+        return self.live.shape[0] // self.frags.shape[0]
+
+
+class Counters(NamedTuple):
+    """Key counters (paper §3.1): popularity per key + global hit/overflow."""
+
+    popularity: jnp.ndarray  # int32[C]
+    hits: jnp.ndarray        # int32[]  total cache hits
+    overflow: jnp.ndarray    # int32[]  requests for cached keys sent to servers
+    cached_reqs: jnp.ndarray # int32[]  total requests for cached keys
+
+
+class SwitchState(NamedTuple):
+    """Full OrbitCache switch data-plane state."""
+
+    lookup: LookupTable
+    state: StateTable
+    reqtab: RequestTable
+    orbit: OrbitBuffer
+    counters: Counters
+
+
+def init_switch_state(
+    num_entries: int,
+    queue_size: int = DEFAULT_QUEUE_SIZE,
+    value_pad: int = 1438,
+    max_frags: int = 1,
+) -> SwitchState:
+    """Fresh, empty switch state with capacity for ``num_entries`` keys."""
+    c, s, f = num_entries, queue_size, max_frags
+    return SwitchState(
+        lookup=LookupTable(
+            hkeys=jnp.zeros((c, HKEY_LANES), jnp.uint32),
+            occupied=jnp.zeros((c,), bool),
+            kidx=jnp.full((c,), -1, jnp.int32),
+        ),
+        state=StateTable(
+            valid=jnp.zeros((c,), bool),
+            version=jnp.zeros((c,), jnp.int32),
+        ),
+        reqtab=RequestTable(
+            client=jnp.full((c * s,), -1, jnp.int32),
+            seq=jnp.zeros((c * s,), jnp.int32),
+            port=jnp.zeros((c * s,), jnp.int32),
+            ts=jnp.zeros((c * s,), jnp.float32),
+            acked=jnp.zeros((c * s,), jnp.int32),
+            qlen=jnp.zeros((c,), jnp.int32),
+            front=jnp.zeros((c,), jnp.int32),
+            rear=jnp.zeros((c,), jnp.int32),
+        ),
+        orbit=OrbitBuffer(
+            live=jnp.zeros((c * f,), bool),
+            kidx=jnp.full((c * f,), -1, jnp.int32),
+            version=jnp.zeros((c * f,), jnp.int32),
+            vlen=jnp.zeros((c * f,), jnp.int32),
+            val=jnp.zeros((c * f, value_pad), jnp.uint8),
+            frags=jnp.ones((c,), jnp.int32),
+        ),
+        counters=Counters(
+            popularity=jnp.zeros((c,), jnp.int32),
+            hits=jnp.zeros((), jnp.int32),
+            overflow=jnp.zeros((), jnp.int32),
+            cached_reqs=jnp.zeros((), jnp.int32),
+        ),
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the OrbitCache dataplane hot spots.
+
+Each kernel directory holds:
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     jitted public wrapper (interpret=True off-TPU)
+  ref.py     pure-jnp oracle (tests assert allclose across shape sweeps)
+
+Hardware adaptation (DESIGN.md §2): the switch's TCAM match and register
+scatters have no TPU analogue — the MXU-native form of both is a one-hot
+matmul, so `orbit_match` (match-action lookup) and `cms` (count-min sketch
+update/query) are formulated as 128-aligned one-hot contractions, and
+`hot_gather` turns the hot-cache row fetch into an on-chip matmul gather.
+"""

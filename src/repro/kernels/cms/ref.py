@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the cms kernel.
+
+Note the sequencing: estimates are taken against the sketch state at the
+start of each *batch tile* (the kernel streams tiles and updates its
+resident accumulator between them).  The oracle replays the same tile
+order, so oracle == kernel exactly for any block_b.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEPTH = 5
+
+
+def cms_update_query_ref(idx, mask, counts, block_b: int = 256):
+    b = idx.shape[0]
+    w = counts.shape[1]
+    est_all = jnp.zeros((b,), jnp.int32)
+    for start in range(0, b, block_b):
+        sl = slice(start, start + block_b)
+        idx_t, msk_t = idx[sl], mask[sl]
+        onehot = (
+            idx_t[:, :, None] == jnp.arange(w)[None, None, :]
+        ) & (msk_t[:, None, None] > 0)                    # [TB, D, W]
+        oh = onehot.astype(jnp.int32)
+        q = jnp.min(
+            jnp.sum(oh * counts[None, :, :], axis=2), axis=1)  # [TB]
+        est_all = est_all.at[sl].set(jnp.where(msk_t > 0, q, 0))
+        counts = counts + jnp.sum(oh, axis=0)
+    return counts, est_all

@@ -1,0 +1,60 @@
+"""hot_gather: OrbitCache hot-row fetch as an MXU matmul gather.
+
+Given token/key ids and the controller's sorted hot-id set, produce the
+hot rows and a hit mask: the id-vs-hot-set equality matrix [TB, C] is cast
+to the row dtype and contracted against the replicated hot table [C, D] on
+the MXU — a gather with zero scalar loops, which is exactly how a "small
+cache" should read on a systolic array.  Cold ids fall through (mask=0,
+row=0) to the sharded store path outside the kernel.
+
+Tiling: grid (B tiles x D tiles); the hot-id vector stays resident; the
+hot table streams its D tile per grid column.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hot_gather_kernel(ids_ref, hot_ids_ref, rows_ref, out_ref, hit_ref):
+    ids = ids_ref[...]                    # [TB]
+    hot = hot_ids_ref[...]                # [C]
+    rows = rows_ref[...]                  # [C, TD]
+    eq = ids[:, None] == hot[None, :]     # [TB, C]
+    out_ref[...] = jax.lax.dot(
+        eq.astype(rows.dtype), rows,
+        preferred_element_type=rows.dtype)
+    hit_ref[...] = jnp.any(eq, axis=1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_d", "interpret"))
+def hot_gather(ids, hot_ids, rows, *, block_b: int = 256,
+               block_d: int = 512, interpret: bool = True):
+    """ids int32[B]; hot_ids int32[C] (pad = -1); rows [C, D].
+
+    Returns (out [B, D], hit int32[B]).
+    """
+    b = ids.shape[0]
+    c, d = rows.shape
+    grid = (b // block_b, d // block_d)
+    return pl.pallas_call(
+        _hot_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+            pl.BlockSpec((c,), lambda i, j: (0,)),
+            pl.BlockSpec((c, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((block_b,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), rows.dtype),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids, hot_ids, rows)

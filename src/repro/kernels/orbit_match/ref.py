@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for orbit_match."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def orbit_match_ref(hkey, table_hkeys, occupied, valid):
+    eq = jnp.all(hkey[:, None, :] == table_hkeys[None, :, :], axis=-1)
+    eq = eq & (occupied[None, :] > 0)
+    hit = jnp.any(eq, axis=1)
+    cidx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    safe = jnp.where(hit, cidx, 0)
+    entry_valid = (valid[safe] > 0) & hit
+    pop = jnp.sum(eq.astype(jnp.int32), axis=0)
+    return (
+        jnp.where(hit, cidx, -1),
+        hit.astype(jnp.int32),
+        entry_valid.astype(jnp.int32),
+        pop,
+    )

@@ -1,0 +1,217 @@
+"""Clients (paper §4: open-loop VMA application; §3.6 collision resolution).
+
+Open-loop request generation: the number of requests per window is Poisson
+(exponential inter-arrival gaps, as in the paper's client app).  Each
+client keeps a list of not-yet-answered requests indexed by SEQ; on a read
+reply it compares the *returned key* with the *requested key* — if they
+differ (hash collision, or CacheIdx inheritance after a cache update,
+paper §3.8) it issues a CRN-REQ so the storage server supplies the correct
+value.
+
+Latency is tracked in quarter-octave log histograms, separately for
+switch-served and server-served requests (the paper's prototype adds
+Cached/Latency header fields for exactly this measurement).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash128_u32, server_of_key
+from repro.core.types import (
+    OP_CRN_REQ,
+    OP_R_REP,
+    OP_R_REQ,
+    OP_W_REP,
+    OP_W_REQ,
+    PacketBatch,
+    empty_batch,
+)
+
+LAT_BUCKETS = 80
+_LAT_BASE_US = 0.25  # bucket 0 lower edge
+
+
+def lat_bucket(lat_us: jnp.ndarray) -> jnp.ndarray:
+    """Quarter-octave log bucket index."""
+    x = jnp.maximum(lat_us, _LAT_BASE_US) / _LAT_BASE_US
+    return jnp.clip((4.0 * jnp.log2(x)).astype(jnp.int32), 0, LAT_BUCKETS - 1)
+
+
+def bucket_edges_us() -> jnp.ndarray:
+    import numpy as np
+    return _LAT_BASE_US * (2.0 ** (np.arange(LAT_BUCKETS + 1) / 4.0))
+
+
+class ClientConfig(NamedTuple):
+    batch: int = 512            # request lanes per window
+    num_clients: int = 4        # paper testbed: 4 client nodes
+    out_width: int = 1 << 16    # outstanding-request ring (SEQ wraparound §3.6)
+    crn_width: int = 64         # correction-request lanes per window
+    base_rtt_us: float = 2.0    # wire+NIC baseline
+    value_pad: int = 1438
+
+
+class ClientState(NamedTuple):
+    out_kidx: jnp.ndarray     # int32[out_width] requested key by seq % W
+    next_seq: jnp.ndarray     # int32[]
+    crn_kidx: jnp.ndarray     # int32[crn_width] pending corrections
+    crn_n: jnp.ndarray        # int32[]
+    hist_switch: jnp.ndarray  # int32[LAT_BUCKETS]
+    hist_server: jnp.ndarray  # int32[LAT_BUCKETS]
+    rx_switch: jnp.ndarray    # int32[] replies served by the switch cache
+    rx_server: jnp.ndarray    # int32[] replies served by storage servers
+    tx: jnp.ndarray           # int32[] requests issued
+    mismatches: jnp.ndarray   # int32[] wrong-key replies detected (-> CRN)
+
+
+def init_clients(cfg: ClientConfig) -> ClientState:
+    return ClientState(
+        out_kidx=jnp.full((cfg.out_width,), -1, jnp.int32),
+        next_seq=jnp.zeros((), jnp.int32),
+        crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
+        crn_n=jnp.zeros((), jnp.int32),
+        hist_switch=jnp.zeros((LAT_BUCKETS,), jnp.int32),
+        hist_server=jnp.zeros((LAT_BUCKETS,), jnp.int32),
+        rx_switch=jnp.zeros((), jnp.int32),
+        rx_server=jnp.zeros((), jnp.int32),
+        tx=jnp.zeros((), jnp.int32),
+        mismatches=jnp.zeros((), jnp.int32),
+    )
+
+
+def generate(
+    st: ClientState,
+    cfg: ClientConfig,
+    rng: jax.Array,
+    cdf: jnp.ndarray,          # workload Zipf CDF
+    perm: jnp.ndarray,         # rank -> kidx
+    vlen_table: jnp.ndarray,   # kidx -> value bytes
+    offered_per_window: jnp.ndarray,  # float: lambda
+    write_ratio: jnp.ndarray,
+    num_servers: int,
+    now: jnp.ndarray,          # float32 us
+) -> tuple[ClientState, PacketBatch]:
+    """One window of open-loop request generation (+ pending CRN drain)."""
+    b = cfg.batch
+    r1, r2, r3 = jax.random.split(rng, 3)
+    n = jnp.minimum(jax.random.poisson(r1, offered_per_window), b).astype(jnp.int32)
+    lane = jnp.arange(b, dtype=jnp.int32)
+    valid = lane < n
+
+    u = jax.random.uniform(r2, (b,), jnp.float32)
+    ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    kidx = perm[jnp.clip(ranks, 0, perm.shape[0] - 1)]
+    is_write = jax.random.uniform(r3, (b,), jnp.float32) < write_ratio
+    seq = st.next_seq + lane
+    op = jnp.where(is_write, OP_W_REQ, OP_R_REQ)
+
+    pk = PacketBatch(
+        op=jnp.where(valid, op, 7),
+        seq=seq,
+        hkey=hash128_u32(kidx),
+        flag=jnp.zeros(b, jnp.int32),
+        kidx=kidx,
+        vlen=vlen_table[kidx],
+        client=seq % cfg.num_clients,
+        port=jnp.zeros(b, jnp.int32),
+        server=server_of_key(kidx, num_servers),
+        ts=jnp.full(b, now, jnp.float32),
+        valid=valid,
+        val=jnp.zeros((b, cfg.value_pad), jnp.uint8),
+    )
+    # record outstanding requested keys (reads; writes harmless to record)
+    slot = jnp.where(valid, seq % cfg.out_width, cfg.out_width)
+    out_kidx = st.out_kidx.at[slot].set(kidx, mode='drop')
+
+    # pending correction requests ride along in dedicated lanes
+    crn_lane = jnp.arange(cfg.crn_width, dtype=jnp.int32)
+    crn_valid = crn_lane < st.crn_n
+    crn_kidx = jnp.where(crn_valid, st.crn_kidx, 0)
+    crn_seq = st.next_seq + b + crn_lane
+    crn = PacketBatch(
+        op=jnp.where(crn_valid, OP_CRN_REQ, 7),
+        seq=crn_seq,
+        hkey=hash128_u32(crn_kidx),
+        flag=jnp.zeros(cfg.crn_width, jnp.int32),
+        kidx=crn_kidx,
+        vlen=vlen_table[crn_kidx],
+        client=crn_seq % cfg.num_clients,
+        port=jnp.zeros(cfg.crn_width, jnp.int32),
+        server=server_of_key(crn_kidx, num_servers),
+        ts=jnp.full(cfg.crn_width, now, jnp.float32),
+        valid=crn_valid,
+        val=jnp.zeros((cfg.crn_width, cfg.value_pad), jnp.uint8),
+    )
+    crn_slot = jnp.where(crn_valid, crn_seq % cfg.out_width, cfg.out_width)
+    out_kidx = out_kidx.at[crn_slot].set(crn_kidx, mode='drop')
+
+    st = st._replace(
+        out_kidx=out_kidx,
+        next_seq=st.next_seq + b + cfg.crn_width,
+        crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
+        crn_n=jnp.zeros((), jnp.int32),
+        tx=st.tx + n,
+    )
+    batch = jax.tree.map(lambda a, c: jnp.concatenate([a, c]), pk, crn)
+    return st, batch
+
+
+def account_switch_served(
+    st: ClientState,
+    cfg: ClientConfig,
+    served: jnp.ndarray,     # bool[C, J]
+    seq: jnp.ndarray,        # int32[C, J]
+    ts: jnp.ndarray,         # float32[C, J]
+    line_kidx: jnp.ndarray,  # int32[C] key carried by the serving orbit line
+    serve_time: jnp.ndarray, # float32[C, J] absolute time of service
+) -> ClientState:
+    """Account orbit-served replies; detect wrong-key serves -> CRN queue."""
+    lat = jnp.maximum(serve_time - ts, 0.05) + cfg.base_rtt_us
+    bucket = jnp.where(served, lat_bucket(lat), LAT_BUCKETS)
+    hist = st.hist_switch.at[bucket.reshape(-1)].add(1, mode='drop')
+    n_served = jnp.sum(served.astype(jnp.int32))
+
+    expected = st.out_kidx[seq % cfg.out_width]           # [C, J]
+    mism = served & (expected != line_kidx[:, None])
+    n_mism = jnp.sum(mism.astype(jnp.int32))
+    # append mismatched (expected) keys to the CRN buffer
+    flat_m = mism.reshape(-1)
+    order = jnp.cumsum(flat_m.astype(jnp.int32)) - flat_m.astype(jnp.int32)
+    dest = jnp.where(flat_m, st.crn_n + order, cfg.crn_width)
+    crn_kidx = st.crn_kidx.at[jnp.clip(dest, 0, cfg.crn_width)].set(
+        jnp.where(flat_m, jnp.broadcast_to(expected, mism.shape).reshape(-1), -1),
+        mode='drop',
+    )
+    crn_n = jnp.minimum(st.crn_n + n_mism, cfg.crn_width)
+    return st._replace(
+        hist_switch=hist,
+        rx_switch=st.rx_switch + n_served,
+        mismatches=st.mismatches + n_mism,
+        crn_kidx=crn_kidx,
+        crn_n=crn_n,
+    )
+
+
+def account_server_replies(
+    st: ClientState,
+    cfg: ClientConfig,
+    pkts: PacketBatch,
+    to_client: jnp.ndarray,  # bool[B]
+    now: jnp.ndarray,
+) -> ClientState:
+    """Account replies forwarded from storage servers (R-REP / W-REP).
+
+    Multi-fragment replies count once (fragment 0 — ``port`` carries the
+    fragment index on reply lanes).
+    """
+    is_rep = to_client & ((pkts.op == OP_R_REP) | (pkts.op == OP_W_REP)) & (pkts.port == 0)
+    lat = jnp.maximum(now - pkts.ts, 0.05) + cfg.base_rtt_us
+    bucket = jnp.where(is_rep, lat_bucket(lat), LAT_BUCKETS)
+    hist = st.hist_server.at[bucket].add(1, mode='drop')
+    return st._replace(
+        hist_server=hist,
+        rx_server=st.rx_server + jnp.sum(is_rep.astype(jnp.int32)),
+    )

@@ -1,0 +1,494 @@
+"""Discrete-time rack simulator (paper §5: testbed = clients + ToR switch +
+rate-limited storage servers).
+
+Time advances in windows (default 100 µs).  Each window:
+
+  1. clients generate an open-loop Poisson batch of requests (+ pending
+     correction requests);
+  2. the switch policy (OrbitCache / NetCache / NoCache) processes the
+     ingress — client requests, last window's server replies, and any
+     controller-injected F-REQs — in ``subrounds`` sequential sub-batches
+     (emulating pipeline-serialized arrival order so queues drain while
+     they fill);
+  3. ROUTE_SERVER packets enter per-server FIFOs drained at the configured
+     rate (the bottleneck, as in the paper); ROUTE_CLIENT packets are
+     accounted by clients; OrbitCache's orbit-served grid is accounted with
+     a recirculation-interval latency model;
+  4. server replies become next window's switch ingress.
+
+The inner loop is one jitted ``lax.scan`` per chunk; the control plane
+(cache updates, top-k reports, dynamic sizing, workload churn) runs on the
+host between chunks, exactly like the paper's switch-CPU controller.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.netcache import init_netcache, netcache_install, netcache_step
+from repro.baselines.nocache import nocache_step
+from repro.core import switch as swm
+from repro.core.controller import CacheController, ControllerConfig
+from repro.core.hashing import hash128_u32, server_of_key
+from repro.core.orbit import ServeGrid
+from repro.core.types import (
+    OP_F_REQ,
+    OP_NONE,
+    ROUTE_CLIENT,
+    ROUTE_SERVER,
+    PacketBatch,
+    SwitchState,
+    empty_batch,
+    init_switch_state,
+)
+from . import client as cl
+from .server import ServerConfig, ServerState, init_servers, server_reports, server_step
+from .workload import Workload
+
+HDR_BYTES = 62  # ethernet+ip+udp+orbitcache header overhead per cache packet
+
+
+@dataclass(frozen=True)
+class RackConfig:
+    scheme: str = "orbitcache"          # orbitcache | netcache | nocache
+    window_us: float = 100.0
+    subrounds: int = 4
+    max_serves: int = 8                 # J per subround (= queue size S)
+    cache_entries: int = 128            # OrbitCache lookup capacity
+    queue_size: int = 8                 # paper prototype: S = 8
+    value_pad: int = 1438               # max payload per packet (paper §3.2)
+    max_frags: int = 1
+    recirc_gbps: float = 100.0          # recirculation port bandwidth
+    netcache_entries: int = 10_000      # paper §5.1 preload size
+    netcache_table: int = 1 << 15
+    netcache_value_limit: int = 64      # paper's NetCache impl: 64 B across 8 stages
+    num_servers: int = 32
+    server_rps: float = 100_000.0       # per-server Rx rate limit
+    server_queue: int = 64
+    client_batch: int = 768
+    num_clients: int = 4
+    fetch_lanes: int = 256
+    track_popularity: bool = False   # enable for dynamic workloads (Fig. 18)
+    seed: int = 0
+
+
+class WindowMetrics(NamedTuple):
+    tx: jnp.ndarray             # offered requests this window
+    rx_switch: jnp.ndarray      # replies served by the switch
+    rx_server: jnp.ndarray      # replies delivered from servers
+    served: jnp.ndarray         # int32[n_srv] per-server serves
+    dropped: jnp.ndarray        # int32[n_srv] per-server drops
+    backlog: jnp.ndarray        # int32[n_srv]
+    hits: jnp.ndarray           # cache hits
+    overflow: jnp.ndarray      # overflow requests (cached -> server)
+    installs: jnp.ndarray
+    crn: jnp.ndarray            # correction requests issued
+    mismatches: jnp.ndarray
+
+
+class SimCarry(NamedTuple):
+    policy: Any                 # SwitchState | NetCacheState | () for nocache
+    servers: ServerState
+    clients: cl.ClientState
+    pending: PacketBatch        # server replies awaiting switch processing
+    fetch: PacketBatch          # controller-injected F-REQs (host-written)
+    rng: jax.Array
+    now: jnp.ndarray            # float32 µs
+    offered: jnp.ndarray        # float32 mean requests per window (Poisson λ)
+    write_ratio: jnp.ndarray    # float32
+
+
+@dataclass
+class SimResult:
+    """Host-side aggregation of a run."""
+    window_us: float
+    traces: dict[str, np.ndarray] = field(default_factory=dict)
+    hist_switch: np.ndarray | None = None
+    hist_server: np.ndarray | None = None
+    info: dict = field(default_factory=dict)
+
+    # -- throughput -----------------------------------------------------------
+    def throughput_rps(self, burn_frac: float = 0.25) -> float:
+        rx = self.traces["rx_switch"] + self.traces["rx_server"]
+        n = len(rx)
+        b = int(n * burn_frac)
+        return float(rx[b:].sum() / ((n - b) * self.window_us * 1e-6))
+
+    def offered_rps(self, burn_frac: float = 0.25) -> float:
+        tx = self.traces["tx"]
+        n = len(tx)
+        b = int(n * burn_frac)
+        return float(tx[b:].sum() / ((n - b) * self.window_us * 1e-6))
+
+    def per_server_rps(self, burn_frac: float = 0.25) -> np.ndarray:
+        s = self.traces["served"]
+        n = s.shape[0]
+        b = int(n * burn_frac)
+        return s[b:].sum(axis=0) / ((n - b) * self.window_us * 1e-6)
+
+    def balancing_efficiency(self, burn_frac: float = 0.25) -> float:
+        """Paper Fig. 13b: min server throughput / max server throughput."""
+        rps = self.per_server_rps(burn_frac)
+        return float(rps.min() / max(rps.max(), 1e-9))
+
+    def max_server_drop_frac(self, burn_frac: float = 0.25) -> float:
+        """Worst per-server drop fraction — a single saturated server (the
+        hot-key server) shows here long before total loss moves."""
+        b = int(self.traces["served"].shape[0] * burn_frac)
+        served = self.traces["served"][b:].sum(axis=0)
+        dropped = self.traces["dropped"][b:].sum(axis=0)
+        denom = np.maximum(served + dropped, 1)
+        return float((dropped / denom).max())
+
+    def overflow_ratio(self, burn_frac: float = 0.25) -> float:
+        n = len(self.traces["hits"])
+        b = int(n * burn_frac)
+        ov = self.traces["overflow"][b:].sum()
+        hits = self.traces["hits"][b:].sum()
+        return float(ov / max(ov + hits, 1))
+
+    def latency_percentile(self, q: float, which: str = "all") -> float:
+        edges = np.asarray(cl.bucket_edges_us())
+        if which == "switch":
+            h = self.hist_switch
+        elif which == "server":
+            h = self.hist_server
+        else:
+            h = self.hist_switch + self.hist_server
+        total = h.sum()
+        if total == 0:
+            return float("nan")
+        cum = np.cumsum(h) / total
+        i = int(np.searchsorted(cum, q))
+        return float(edges[min(i + 1, len(edges) - 1)])
+
+
+class RackSimulator:
+    """One storage rack under a switch policy."""
+
+    def __init__(self, cfg: RackConfig, wl: Workload):
+        self.cfg = cfg
+        self.wl = wl
+        self.server_cfg = ServerConfig(
+            num_servers=cfg.num_servers,
+            queue_depth=cfg.server_queue,
+            cap_per_window=max(1, int(round(cfg.server_rps * cfg.window_us * 1e-6))),
+            value_pad=cfg.value_pad,
+            max_frags=cfg.max_frags,
+            track_popularity=cfg.track_popularity,
+        )
+        self.client_cfg = cl.ClientConfig(
+            batch=cfg.client_batch,
+            num_clients=cfg.num_clients,
+            value_pad=cfg.value_pad,
+        )
+        self.controller = CacheController(ControllerConfig(
+            active_size=cfg.cache_entries, max_size=cfg.cache_entries,
+        ))
+        self._chunk_fn: dict[int, Any] = {}
+        self.carry = self._init_carry()
+
+    # -- dynamic knobs (no recompilation) -------------------------------------
+    def set_offered(self, rps: float) -> None:
+        self.carry = self.carry._replace(
+            offered=jnp.float32(rps * self.cfg.window_us * 1e-6))
+
+    def set_write_ratio(self, r: float) -> None:
+        self.carry = self.carry._replace(write_ratio=jnp.float32(r))
+
+    def reset_stats(self) -> None:
+        """Zero client histograms/counters (per-phase measurements)."""
+        self.carry = self.carry._replace(clients=cl.init_clients(self.client_cfg)._replace(
+            out_kidx=self.carry.clients.out_kidx,
+            next_seq=self.carry.clients.next_seq,
+            crn_kidx=self.carry.clients.crn_kidx,
+            crn_n=self.carry.clients.crn_n,
+        ))
+
+    # ------------------------------------------------------------------ setup
+    def _init_policy(self):
+        c = self.cfg
+        if c.scheme == "orbitcache":
+            return init_switch_state(
+                c.cache_entries, c.queue_size, c.value_pad, c.max_frags
+            )
+        if c.scheme == "netcache":
+            return init_netcache(c.netcache_table, c.netcache_value_limit)
+        if c.scheme == "nocache":
+            return ()
+        raise ValueError(f"unknown scheme {c.scheme!r}")
+
+    def _init_carry(self) -> SimCarry:
+        c = self.cfg
+        reply_w = c.num_servers * self.server_cfg.cap_per_window * c.max_frags
+        return SimCarry(
+            policy=self._init_policy(),
+            servers=init_servers(self.server_cfg, self.wl.cfg.num_keys),
+            clients=cl.init_clients(self.client_cfg),
+            pending=empty_batch(reply_w, c.value_pad),
+            fetch=empty_batch(c.fetch_lanes, c.value_pad),
+            rng=jax.random.PRNGKey(c.seed),
+            now=jnp.float32(0.0),
+            offered=jnp.float32(self.wl.cfg.offered_rps * c.window_us * 1e-6),
+            write_ratio=jnp.float32(self.wl.cfg.write_ratio),
+        )
+
+    # -------------------------------------------------------------- preload
+    def preload(self, keys: np.ndarray) -> None:
+        """Install the hot set before measuring (paper §5.1)."""
+        c = self.cfg
+        if c.scheme == "orbitcache":
+            sw, fetches = self.controller.preload(self.carry.policy, keys)
+            self.carry = self.carry._replace(policy=sw)
+            self.inject_fetches(fetches)
+            # warm: let F-REQs reach servers and F-REPs install orbit lines
+            self.run_windows(16)
+        elif c.scheme == "netcache":
+            st, n = netcache_install(
+                self.carry.policy, keys, self.wl.vlen_np[keys],
+                key_size=self.wl.cfg.key_size,
+                value_limit=c.netcache_value_limit,
+            )
+            self.carry = self.carry._replace(policy=st)
+            self._installed = n
+        # nocache: nothing to do
+
+    def inject_fetches(self, fetches: list[tuple[int, int]]) -> None:
+        """Queue controller F-REQs for the next window (value fetch via the
+        data plane, paper §3.8)."""
+        c = self.cfg
+        fb = empty_batch(c.fetch_lanes, c.value_pad)
+        n = min(len(fetches), c.fetch_lanes)
+        if n == 0:
+            self.carry = self.carry._replace(fetch=fb)
+            return
+        ks = np.asarray([k for k, _ in fetches[:n]], np.int32)
+        kj = jnp.asarray(ks)
+        fb = fb._replace(
+            op=fb.op.at[:n].set(OP_F_REQ),
+            kidx=fb.kidx.at[:n].set(kj),
+            hkey=fb.hkey.at[:n].set(hash128_u32(kj)),
+            vlen=fb.vlen.at[:n].set(self.wl.vlen[kj]),
+            server=fb.server.at[:n].set(server_of_key(kj, c.num_servers)),
+            valid=fb.valid.at[:n].set(True),
+        )
+        self.carry = self.carry._replace(fetch=fb)
+
+    # ---------------------------------------------------------------- window
+    def _window_step(self, carry: SimCarry, _) -> tuple[SimCarry, WindowMetrics]:
+        c = self.cfg
+        rng, r_gen = jax.random.split(carry.rng)
+        clients, reqs = cl.generate(
+            carry.clients, self.client_cfg, r_gen,
+            self.wl.cdf, self.wl.perm, self.wl.vlen,
+            carry.offered, carry.write_ratio, c.num_servers, carry.now,
+        )
+        ingress = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs), reqs, carry.pending, carry.fetch
+        )
+        total = ingress.op.shape[0]
+        pad_to = ((total + c.subrounds - 1) // c.subrounds) * c.subrounds
+        if pad_to != total:
+            padding = empty_batch(pad_to - total, c.value_pad)
+            ingress = jax.tree.map(lambda a, p: jnp.concatenate([a, p]), ingress, padding)
+        # Interleave lanes across subrounds (lane i -> subround i % R):
+        # arrivals spread over the window like real packet interleaving —
+        # a contiguous split would slam the whole window's burst into one
+        # pipeline pass and overflow the 8-deep request queues.
+        sub = jax.tree.map(
+            lambda a: a.reshape((pad_to // c.subrounds, c.subrounds) + a.shape[1:])
+            .swapaxes(0, 1),
+            ingress,
+        )
+
+        window = jnp.float32(c.window_us)
+        if c.scheme == "orbitcache":
+            # recirculation budget in packets per subround: port bandwidth /
+            # mean live line size (header + key + value fragment)
+            def one_subround(sw: SwitchState, pk: PacketBatch):
+                live = sw.orbit.live
+                nlive = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+                mean_line = (
+                    jnp.sum(jnp.where(live, sw.orbit.vlen, 0)) / nlive
+                    + HDR_BYTES + self.wl.cfg.key_size
+                )
+                pps = (c.recirc_gbps * 1e9 / 8.0) / mean_line
+                budget = (pps * window * 1e-6 / c.subrounds).astype(jnp.int32)
+                sw2, out = swm.switch_step(sw, pk, budget, c.max_serves)
+                interval_us = nlive.astype(jnp.float32) / pps * 1e6
+                return sw2, (out.route, out.flag, out.grid, out.stats, interval_us)
+
+            policy, (routes, flags, grids, stats, intervals) = jax.lax.scan(
+                one_subround, carry.policy, sub
+            )
+            switch_reply = jnp.zeros((pad_to,), bool)
+            # account orbit-served replies (flatten subround dim into C)
+            r_idx = jnp.arange(c.subrounds, dtype=jnp.float32)[:, None, None]
+            serve_time = (
+                carry.now
+                + (r_idx + 0.5) * window / c.subrounds
+                + (grids.order.astype(jnp.float32) + 1.0) * intervals[:, None, None]
+            )
+            clients = cl.account_switch_served(
+                clients, self.client_cfg,
+                grids.served.reshape(-1, c.max_serves),
+                grids.seq.reshape(-1, c.max_serves),
+                grids.ts.reshape(-1, c.max_serves),
+                grids.kidx.reshape(-1),
+                serve_time.reshape(-1, c.max_serves),
+            )
+            hits = jnp.sum(stats.n_hit)
+            overflow = jnp.sum(stats.n_overflow) + jnp.sum(stats.n_invalid_fwd)
+            installs = jnp.sum(stats.n_install)
+            crn = jnp.sum(stats.n_crn)
+            rx_sw = jnp.sum(stats.n_served)
+        elif c.scheme == "netcache":
+            def one_subround(st, pk):
+                st2, route, flag, srep, n_hit = netcache_step(st, pk)
+                return st2, (route, flag, srep, n_hit)
+
+            policy, (routes, flags, sreps, n_hits) = jax.lax.scan(
+                one_subround, carry.policy, sub
+            )
+            switch_reply = sreps.reshape(-1)
+            hits = jnp.sum(n_hits)
+            overflow = jnp.zeros((), jnp.int32)
+            installs = jnp.zeros((), jnp.int32)
+            crn = jnp.zeros((), jnp.int32)
+            # switch-served latency ~ switch pipeline (sub-microsecond + wire)
+            lat = jnp.full((pad_to,), 1.0, jnp.float32) + self.client_cfg.base_rtt_us
+            bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
+            clients = clients._replace(
+                hist_switch=clients.hist_switch.at[bucket].add(1, mode='drop'),
+                rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
+            )
+            rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
+        else:  # nocache
+            def one_subround(st, pk):
+                st2, route, flag = nocache_step(st, pk)
+                return st2, (route, flag)
+
+            policy, (routes, flags) = jax.lax.scan(one_subround, carry.policy, sub)
+            switch_reply = jnp.zeros((pad_to,), bool)
+            hits = overflow = installs = crn = jnp.zeros((), jnp.int32)
+            rx_sw = jnp.zeros((), jnp.int32)
+
+        route_flat = routes.reshape(-1)
+        flag_flat = flags.reshape(-1)
+        ing_flat = jax.tree.map(lambda a: a.reshape((pad_to,) + a.shape[2:]), sub)
+
+        # servers
+        to_server = (route_flat == ROUTE_SERVER) & ing_flat.valid
+        servers, sout = server_step(
+            carry.servers, self.server_cfg, ing_flat, to_server, flag_flat,
+            carry.now,
+        )
+
+        # replies forwarded to clients this window (previous window's server
+        # output routed through the switch)
+        to_client = (route_flat == ROUTE_CLIENT) & ing_flat.valid & ~switch_reply
+        rx_srv_before = clients.rx_server
+        clients = cl.account_server_replies(
+            clients, self.client_cfg, ing_flat, to_client, carry.now + window
+        )
+        rx_srv = clients.rx_server - rx_srv_before
+
+        metrics = WindowMetrics(
+            tx=jnp.sum((reqs.valid & (reqs.op != OP_NONE)).astype(jnp.int32)),
+            rx_switch=rx_sw,
+            rx_server=rx_srv,
+            served=sout.served_now,
+            dropped=sout.dropped_now,
+            backlog=sout.backlog,
+            hits=hits,
+            overflow=overflow,
+            installs=installs,
+            crn=crn,
+            mismatches=clients.mismatches,
+        )
+        new_carry = SimCarry(
+            policy=policy,
+            servers=servers,
+            clients=clients,
+            pending=sout.replies,
+            fetch=empty_batch(c.fetch_lanes, c.value_pad),
+            rng=rng,
+            now=carry.now + window,
+            offered=carry.offered,
+            write_ratio=carry.write_ratio,
+        )
+        return new_carry, metrics
+
+    # ------------------------------------------------------------------ run
+    def _chunk(self, n: int):
+        if n not in self._chunk_fn:
+            def body(carry):
+                return jax.lax.scan(self._window_step, carry, None, length=n)
+            self._chunk_fn[n] = jax.jit(body)
+        return self._chunk_fn[n]
+
+    def run_windows(self, n: int) -> dict[str, np.ndarray]:
+        carry, ys = self._chunk(n)(self.carry)
+        self.carry = carry
+        return {k: np.asarray(v) for k, v in ys._asdict().items()}
+
+    def run(
+        self,
+        sim_seconds: float,
+        chunk_windows: int = 256,
+        controller_period_s: float | None = None,
+        on_period: Any = None,
+    ) -> SimResult:
+        """Run the rack; optionally run control-plane updates periodically."""
+        c = self.cfg
+        total_windows = int(round(sim_seconds / (c.window_us * 1e-6)))
+        # Round to whole chunks so every scan has the same length (one
+        # compilation, reused across all sweep points and schemes).
+        total_windows = max(chunk_windows, (total_windows // chunk_windows) * chunk_windows)
+        period_w = (
+            int(round(controller_period_s / (c.window_us * 1e-6)))
+            if controller_period_s else None
+        )
+        traces: list[dict[str, np.ndarray]] = []
+        done = 0
+        since_period = 0
+        while done < total_windows:
+            n = min(chunk_windows, total_windows - done)
+            traces.append(self.run_windows(n))
+            done += n
+            since_period += n
+            if period_w and since_period >= period_w:
+                since_period = 0
+                self._control_plane_update()
+                if on_period:
+                    on_period(self, done)
+        merged = {
+            k: np.concatenate([t[k] for t in traces], axis=0)
+            for k in traces[0]
+        }
+        res = SimResult(window_us=c.window_us, traces=merged)
+        res.hist_switch = np.asarray(self.carry.clients.hist_switch)
+        res.hist_server = np.asarray(self.carry.clients.hist_server)
+        res.info = dict(scheme=c.scheme, active_size=self.controller.active_size)
+        return res
+
+    def _control_plane_update(self) -> None:
+        """Cache update from switch counters + server top-k reports (§3.8)."""
+        if self.cfg.scheme != "orbitcache":
+            return
+        servers, reports = server_reports(
+            self.carry.servers, self.controller.cfg.k_report
+        )
+        sw = self.carry.policy
+        overflow = int(sw.counters.overflow)
+        cached = int(sw.counters.cached_reqs)
+        sw2, info = self.controller.update(sw, reports, overflow, cached)
+        self.carry = self.carry._replace(policy=sw2, servers=servers)
+        self.inject_fetches(info.fetches)
+        self._last_update = info

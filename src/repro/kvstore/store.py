@@ -1,0 +1,116 @@
+"""Key-value storage (paper §4: TommyDS-backed store behind a shim layer).
+
+Two layers:
+
+* ``ByteStore`` — a real, byte-accurate store for tests and small systems:
+  variable-length keys and values in padded uint8 arrays, with insert /
+  get / update, plus the 128-bit key hash of each key (the shim layer's
+  HKEY computation).
+
+* ``synth_value`` — a deterministic value function ``(kidx, version) ->
+  bytes`` used by the rack simulator so 10M-key stores need no 14 GB of
+  RAM: servers "read" a value by regenerating it, and any component
+  (orbit lines, clients, tests) can verify bytes exactly.  A write bumps
+  the key's version, changing the bytes — so coherence bugs (stale
+  values) are *detectable by content*, not just by flags.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.hashing import hash128_bytes_np
+
+
+def synth_value(kidx: jnp.ndarray, version: jnp.ndarray, width: int,
+                offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """Deterministic value bytes: uint8[..., width] from (key, version).
+
+    byte[i] = splitmix32(kidx * P1 ^ version * P2 ^ (offset + i)) & 0xFF
+
+    ``offset`` (broadcastable to kidx's shape) selects a byte window — used
+    to generate individual fragments of multi-packet values (paper §3.10).
+    """
+    k = kidx.astype(jnp.uint32)[..., None]
+    v = version.astype(jnp.uint32)[..., None]
+    off = jnp.asarray(offset, jnp.uint32)[..., None] if not isinstance(offset, int) \
+        else jnp.uint32(offset)
+    i = jnp.arange(width, dtype=jnp.uint32) + off
+    x = k * jnp.uint32(0x9E3779B9) ^ v * jnp.uint32(0x85EBCA6B) ^ i
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return (x & 0xFF).astype(jnp.uint8)
+
+
+def synth_value_np(kidx, version, width: int) -> np.ndarray:
+    k = np.uint32((int(kidx) * 0x9E3779B9) & 0xFFFFFFFF)
+    v = np.uint32((int(version) * 0x85EBCA6B) & 0xFFFFFFFF)
+    i = np.arange(width, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        x = (k ^ v ^ i).astype(np.uint32)
+        x ^= x >> np.uint32(16)
+        x = (x * np.uint32(0x7FEB352D)).astype(np.uint32)
+        x ^= x >> np.uint32(15)
+        x = (x * np.uint32(0x846CA68B)).astype(np.uint32)
+        x ^= x >> np.uint32(16)
+    return (x & np.uint32(0xFF)).astype(np.uint8)
+
+
+class ByteStore:
+    """Byte-accurate variable-length KV store (host-side reference)."""
+
+    def __init__(self, key_pad: int = 64, value_pad: int = 1438, capacity: int = 4096):
+        self.key_pad = key_pad
+        self.value_pad = value_pad
+        self.keys = np.zeros((capacity, key_pad), np.uint8)
+        self.klen = np.zeros(capacity, np.int32)
+        self.vals = np.zeros((capacity, value_pad), np.uint8)
+        self.vlen = np.zeros(capacity, np.int32)
+        self.hkey = np.zeros((capacity, 4), np.uint32)
+        self.version = np.zeros(capacity, np.int32)
+        self.used = np.zeros(capacity, bool)
+        self._index: dict[bytes, int] = {}
+
+    def put(self, key: bytes, value: bytes) -> int:
+        if len(key) > self.key_pad or len(value) > self.value_pad:
+            raise ValueError("key/value exceeds pad")
+        if key in self._index:
+            i = self._index[key]
+            self.vals[i] = 0
+            self.vals[i, : len(value)] = np.frombuffer(value, np.uint8)
+            self.vlen[i] = len(value)
+            self.version[i] += 1
+            return i
+        free = np.flatnonzero(~self.used)
+        if len(free) == 0:
+            raise RuntimeError("store full")
+        i = int(free[0])
+        self.used[i] = True
+        self.keys[i, : len(key)] = np.frombuffer(key, np.uint8)
+        self.klen[i] = len(key)
+        self.vals[i, : len(value)] = np.frombuffer(value, np.uint8)
+        self.vlen[i] = len(value)
+        self.hkey[i] = hash128_bytes_np(key)
+        self.version[i] = 0
+        self._index[key] = i
+        return i
+
+    def get(self, key: bytes) -> tuple[bytes, int] | None:
+        i = self._index.get(key)
+        if i is None:
+            return None
+        return bytes(self.vals[i, : self.vlen[i]]), int(self.version[i])
+
+    def get_by_idx(self, i: int) -> tuple[bytes, bytes, int]:
+        return (
+            bytes(self.keys[i, : self.klen[i]]),
+            bytes(self.vals[i, : self.vlen[i]]),
+            int(self.version[i]),
+        )
+
+    def __len__(self) -> int:
+        return int(self.used.sum())

@@ -1,0 +1,396 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, prove it fits (memory_analysis) and extract roofline
+inputs (cost_analysis + HLO collective bytes).
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices to build the
+(2,16,16) multi-pod mesh.  Smoke tests and benchmarks never import this
+module, so they keep seeing 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, LONG_CONTEXT_OK, SHAPES, get_arch
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_mod
+from repro.parallel import param_specs as pspec
+from repro.parallel.sharding import make_ctx
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init
+from repro.training.train_step import TrainConfig, make_train_step
+from repro.launch.mesh import make_production_mesh
+
+# ---------------------------------------------------------------------------
+# per-cell memory/distribution knobs (the >=100B archs need FSDP + lean
+# optimizer states + bf16 grad accumulation to fit a 256-chip pod)
+# ---------------------------------------------------------------------------
+BIG = {"llama3-405b", "mistral-large-123b"}
+MID = {"mixtral-8x7b"}
+
+
+def cell_knobs(arch: str, shape: ShapeConfig) -> dict:
+    k = dict(fsdp=False, microbatches=1, accum_dtype="float32",
+             opt_dtype="float32", sequence_parallel=False)
+    if shape.kind == "train":
+        if arch in BIG:
+            # §Perf note: a sequence-parallel residual constraint was tried
+            # and REFUTED — GSPMD re-gathers [B,S,d] per matmul (wire 3x).
+            # Proper Megatron-SP needs manual shard_map collectives.
+            k.update(fsdp=True, microbatches=16, accum_dtype="bfloat16",
+                     opt_dtype="bfloat16")
+        elif arch in MID:
+            k.update(fsdp=True, microbatches=8, accum_dtype="bfloat16",
+                     opt_dtype="bfloat16")
+        elif arch == "deepseek-v2-lite-16b":
+            k.update(microbatches=8)
+        else:
+            k.update(microbatches=4)
+    # >=100B params never fit TP-only: 2-D (data x model) weight sharding
+    # for serving too; GSPMD picks weight-gather (prefill, compute-bound)
+    # or partial-sum (decode, latency-bound) per contraction.
+    elif arch in BIG:
+        k.update(fsdp=True)
+    return k
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one cell."""
+    b = shape.global_batch
+    s = shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.num_codebooks:
+            d = {"frame_embeds": _sd((b, s, cfg.d_model), jnp.bfloat16)}
+            if shape.kind == "train":
+                d["labels"] = _sd((b, s, cfg.num_codebooks), jnp.int32)
+            return d
+        d = {}
+        if cfg.frontend == "vision_stub":
+            tv = cfg.vision_tokens
+            d["tokens"] = _sd((b, s - tv), jnp.int32)
+            d["vision_embeds"] = _sd((b, tv, cfg.d_model), jnp.bfloat16)
+            d["mrope_pos"] = _sd((3, b, s), jnp.int32)
+        else:
+            d["tokens"] = _sd((b, s), jnp.int32)
+        if shape.kind == "train":
+            d["labels"] = _sd((b, s), jnp.int32)
+        return d
+    # decode: one new token against a seq_len-deep cache
+    if cfg.num_codebooks:
+        return {"codes": _sd((b, 1, cfg.num_codebooks), jnp.int32)}
+    d = {"tokens": _sd((b, 1), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        d["mrope_pos"] = _sd((3, b, 1), jnp.int32)
+    return d
+
+
+def batch_shardings(batch, cfg, ctx, mesh):
+    dp = ctx.rules.dp
+    dpn = ctx.data_size
+
+    def spec(k, v):
+        bdim = v.shape[1] if k == "mrope_pos" else v.shape[0]
+        lead = dp if bdim % dpn == 0 else None
+        if k == "mrope_pos":
+            return P(None, lead, *([None] * (v.ndim - 2)))
+        return P(lead, *([None] * (v.ndim - 1)))
+
+    return {k: NamedSharding(mesh, spec(k, v)) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# decode-state shardings (path-driven)
+# ---------------------------------------------------------------------------
+def decode_state_specs(state, cfg: ModelConfig, ctx):
+    tp = ctx.rules.model_axis
+    tpn = ctx.model_size
+    dp = ctx.rules.dp
+    dpn = ctx.data_size
+
+    def div(n, m):
+        return n % m == 0
+
+    def leaf_spec(path: str, x) -> P:
+        nd = x.ndim
+        parts = [q for q in path.replace("'", "").replace("[", "/")
+                 .replace("]", "").split("/") if q]
+        shape = x.shape
+
+        def batch_ax(i):
+            return dp if div(shape[i], dpn) else None
+
+        if parts[-1] in ("pos", "len"):
+            return P(batch_ax(0))
+        if "cache" in parts[0] or parts[0] in ("attn_cache", "dense_cache"):
+            # The cache's sequence axis is tensor-parallel (flash-decoding):
+            # every device holds a T/tp slab of every sequence; softmax and
+            # the PV product reduce over T with small all-reduces.  This
+            # balances perfectly regardless of head divisibility.
+            # GQA kv: [L,B,T,H,dh] | MLA c: [L,B,T,r] / kr: [L,B,T,rope]
+            t_ax = tp if div(shape[2], tpn) else None
+            if nd == 5:
+                return P(None, batch_ax(1), t_ax, None, None)
+            if nd == 4:
+                return P(None, batch_ax(1), t_ax, None)
+        if parts[0] == "mlstm":
+            # c [U,k,B,H,dk,dv] / n [U,k,B,H,dk] / m [U,k,B,H]
+            if parts[-1] == "c":
+                return P(None, None, batch_ax(2), None, None,
+                         tp if div(shape[5], tpn) else None)
+            if parts[-1] == "n":
+                return P(None, None, batch_ax(2), None, None)
+            return P(None, None, batch_ax(2), None)
+        if parts[0] == "slstm":
+            return P(None, batch_ax(1), *([None] * (nd - 2)))
+        if parts[0] in ("mamba", "lead"):
+            pre = 2 if parts[0] == "mamba" else 1
+            if parts[-1] == "h":      # [.., B, H, dh, N]
+                return P(*([None] * pre), batch_ax(pre),
+                         tp if div(shape[pre + 1], tpn) else None, None, None)
+            if parts[-1] == "conv_x":  # [.., B, w-1, di]
+                return P(*([None] * pre), batch_ax(pre), None,
+                         tp if div(shape[pre + 2], tpn) else None)
+            return P(*([None] * pre), batch_ax(pre), *([None] * (nd - pre - 1)))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    specs = [leaf_spec("/".join(str(q) for q in pth), leaf)
+             for pth, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# collective parsing (post-SPMD optimized HLO)
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLL_RE = re.compile(
+    r"(\w[\w\d.-]*)\s*=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum output-shape bytes of every collective op in optimized HLO."""
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo):
+        shapes_blob, kind = m.group(2), m.group(3)
+        nbytes = 0
+        for sm in _SHAPE_RE.finditer(shapes_blob):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        totals[kind] = totals.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: str | None = None) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "pure full-attention arch; 500k dense KV cache "
+                          "needs sub-quadratic attention (DESIGN.md)"}
+    knobs = cell_knobs(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh, sequence_parallel=knobs.get("sequence_parallel", False))
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(lambda: model_mod.init_params(
+        jax.random.PRNGKey(0), cfg))
+    p_specs = pspec.tree_specs(params_shape, cfg, ctx, fsdp=knobs["fsdp"])
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    batch = input_specs(cfg, shape)
+    b_shard = batch_shardings(batch, cfg, ctx, mesh)
+
+    if shape.kind == "train":
+        tc = TrainConfig(
+            microbatches=knobs["microbatches"],
+            accum_dtype=knobs["accum_dtype"],
+            opt=AdamWConfig(state_dtype=knobs["opt_dtype"]),
+        )
+        opt_shape = jax.eval_shape(partial(adamw_init, cfg=tc.opt), params_shape)
+        o_specs = pspec.opt_state_specs(p_specs, params_shape, ctx)
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs)
+        # gradient accumulators live ZeRO-sharded (per-mb reduce-scatter
+        # instead of all-reduce for replicated-param grads, §Perf)
+        step = make_train_step(cfg, tc, ctx, accum_shardings=o_shard.mu)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        def prefill_step(params, b):
+            logits, aux = model_mod.forward(params, b, cfg, ctx)
+            return logits
+        jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(params_shape, batch)
+    else:  # decode
+        state_shape = jax.eval_shape(
+            lambda: model_mod.init_decode_state(cfg, shape.global_batch,
+                                                shape.seq_len))
+        s_specs = decode_state_specs(state_shape, cfg, ctx)
+        s_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), s_specs)
+
+        def serve_step(params, state, b):
+            return model_mod.decode_step(params, state, b, cfg, ctx)
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, s_shard, b_shard),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params_shape, state_shape, batch)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch.hlo_analysis import analyze
+    ana = analyze(hlo, n_devices=512 if multi_pod else 256)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+
+    def mem_dict(m):
+        if m is None:
+            return {}
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(m, k, None)
+            if v is not None:
+                out[k] = int(v)
+        return out
+
+    def cost_dict(c):
+        if not c:
+            return {}
+        return {k: float(v) for k, v in c.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": 512 if multi_pod else 256,
+        "status": "ok",
+        "knobs": knobs,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_dict(mem),
+        "cost": cost_dict(cost),
+        "collectives": coll,
+        "analysis": {
+            "flops": ana.flops,
+            "hbm_bytes": ana.hbm_bytes,
+            "collective_wire_bytes": ana.collective_wire_bytes,
+            "collective_wire_bytes_bf16adj": ana.collective_wire_bytes_bf16adj,
+            "collective_bytes_by_kind": ana.collective_bytes_by_kind,
+            "collective_counts": ana.collective_counts,
+            "bf16_upcast_bytes": ana.bf16_upcast_bytes,
+            "notes": ana.notes[:10],
+        },
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                hlo_path = os.path.join(args.out, tag + ".hlo") if args.save_hlo else None
+                print(f"=== {tag} ===", flush=True)
+                try:
+                    r = lower_cell(arch, shape, mp, save_hlo=hlo_path)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "error", "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-2000:]}
+                results.append(r)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(r, f, indent=1)
+                if r["status"] == "ok":
+                    mem = r["memory"]
+                    print(f"  ok lower={r['lower_s']}s compile={r['compile_s']}s "
+                          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"flops={r['cost'].get('flops', 0):.3g} "
+                          f"coll={r['collectives']['total_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                else:
+                    print(f"  {r['status']}: {r.get('reason', r.get('error'))}",
+                          flush=True)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRYRUN: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,437 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — a scanned
+126-layer model reports ~1 layer of FLOPs.  This analyzer rebuilds the cost
+model with loop accounting:
+
+  * parse every computation and its instructions (result shape = lhs);
+  * build the call graph (while body/condition, call/to_apply, fusion
+    calls) and extract while trip counts from condition computations
+    (``compare(gte, constant(N)), direction=LT``);
+  * per computation: dot FLOPs (2 x out_elems x contraction), HBM traffic
+    (2 x result bytes of memory-producing instructions — the fusion
+    boundary model), and collective wire bytes (ring factors from replica
+    group size);
+  * total = sum over computations of cost x execution multiplier.
+
+Known model limits (documented in EXPERIMENTS.md): elementwise FLOPs are
+ignored (MXU roofline), HBM traffic is a fusion-boundary approximation,
+and XLA:CPU's bf16->f32 upcast copies are counted (they do not exist on
+TPU) — the analyzer reports them separately for correction.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_TRIP_CFG = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INST = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([a-z][\w\-]*)\((.*)$")
+_SHAPE = re.compile(r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128|token)\[([\d,]*)\]")
+_CALLED = re.compile(r"(?:to_apply|body|condition)=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+_DIRECTION = re.compile(r"direction=(LT|LE|GT|GE|NE|EQ)")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# ops that never touch HBM on their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "iota", "reshape", "transpose", "broadcast",
+    "while", "conditional", "call", "custom-call", "partition-id",
+    "replica-id", "rng-bit-generator", "domain", "opt-barrier",
+}
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+def _shape_bytes(blob: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(blob):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(blob: str) -> list[int]:
+    m = _SHAPE.search(blob)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instruction:
+    name: str
+    shape_blob: str
+    opcode: str
+    rest: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.shape_blob)
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)   # %name -> shape blob
+
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    # XLA:CPU upcasts bf16 collectives to f32 (no native bf16 reductions);
+    # on TPU they run in bf16.  The adjusted metric counts f32 collectives
+    # >1 MiB at half — the TPU-native wire volume.
+    collective_wire_bytes_bf16adj: float = 0.0
+    collective_bytes_by_kind: dict = field(default_factory=dict)
+    collective_counts: dict = field(default_factory=dict)
+    bf16_upcast_bytes: float = 0.0   # CPU-backend artifact (see module doc)
+    while_trip_counts: dict = field(default_factory=dict)
+    notes: list = field(default_factory=list)
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if "/*" in line:
+            line = _COMMENT.sub("", line)
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST.match(line)
+        if m:
+            inst = Instruction(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instructions.append(inst)
+            cur.defs[inst.name] = inst.shape_blob
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    out_elems = 1
+    dims = _shape_dims(inst.shape_blob)
+    for d in dims:
+        out_elems *= d
+    # contraction size from the lhs operand's shape
+    cm = _CONTRACT.search(inst.rest)
+    ops = [o.strip().lstrip("%") for o in inst.rest.split("(")[0].split(",")]
+    # operands are at the start of `rest` up to first ')': parse names
+    m = re.match(r"([^)]*)\)", inst.rest)
+    operand_names = []
+    if m:
+        for tok in m.group(1).split(","):
+            tok = tok.strip().lstrip("%")
+            if tok:
+                operand_names.append(tok)
+    contraction = 1
+    if cm and operand_names:
+        lhs_shape = _shape_dims(comp.defs.get(operand_names[0], ""))
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_shape):
+                contraction *= lhs_shape[int(idx)]
+    return 2.0 * out_elems * contraction
+
+
+def _trip_count(cond: Computation) -> int | None:
+    direction = None
+    const = None
+    for inst in cond.instructions:
+        d = _DIRECTION.search(inst.rest)
+        if inst.opcode == "compare" and d:
+            direction = d.group(1)
+            # constant may be inline `constant(N)` in an operand def
+            for op in re.findall(r"%([\w.\-]+)", inst.rest):
+                blob = cond.defs.get(op, "")
+                pass
+        c = _CONST.search(inst.rest)
+        if inst.opcode == "constant" and c:
+            const = int(c.group(1))
+    if const is None:
+        # sometimes the constant is inline in the compare
+        for inst in cond.instructions:
+            if inst.opcode == "compare":
+                c = _CONST.search(inst.rest)
+                if c:
+                    const = int(c.group(1))
+    if const is None or direction is None:
+        return None
+    if direction == "LT":
+        return const
+    if direction == "LE":
+        return const + 1
+    return None
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _collective_wire(kind: str, inst: Instruction, comp: Computation,
+                     n_devices: int) -> float:
+    """Per-device ICI wire bytes (ring algorithm factors)."""
+    out_b = inst.result_bytes
+    g = _group_size(inst.rest, n_devices)
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if kind.startswith("all-gather"):
+        return f * out_b                  # result assembled from g shards
+    if kind.startswith("all-reduce"):
+        return 2.0 * f * out_b            # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        # operand bytes = out * g
+        return f * out_b * g
+    if kind == "all-to-all":
+        return f * out_b
+    if kind.startswith("collective-permute"):
+        return float(out_b)
+    return float(out_b)
+
+
+def _operand_names(inst: Instruction) -> list[str]:
+    m = re.match(r"([^)]*)\)", inst.rest)
+    if not m:
+        return []
+    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
+
+
+def _mem_bytes(inst: Instruction, comp: Computation,
+               comps: dict[str, Computation]) -> int:
+    """Effective HBM bytes moved by one instruction.
+
+    dynamic-update-slice and scatter update buffers IN PLACE — the traffic
+    is the updated slice, not the whole buffer (a scan backward writes one
+    timestep per iteration; counting the full [S,...] buffer per step
+    overstates traffic by orders of magnitude — §Perf iteration 1 finding).
+    """
+    def inplace_bytes(root_inst, defs) -> int | None:
+        ops = _operand_names(root_inst)
+        if root_inst.opcode == "dynamic-update-slice" and len(ops) >= 2:
+            return _shape_bytes(defs.get(ops[1], ""))
+        if root_inst.opcode == "scatter" and len(ops) >= 3:
+            return _shape_bytes(defs.get(ops[2], ""))
+        return None
+
+    if inst.opcode in ("dynamic-update-slice", "scatter"):
+        b = inplace_bytes(inst, comp.defs)
+        if b is not None:
+            return b
+    if inst.opcode == "fusion":
+        fm = _CALLS.search(inst.rest)
+        if fm and fm.group(1) in comps:
+            body = comps[fm.group(1)]
+            if body.instructions:
+                root = body.instructions[-1]
+                b = inplace_bytes(root, body.defs)
+                if b is not None:
+                    return b
+    return inst.result_bytes
+
+
+def analyze(hlo: str, n_devices: int = 1) -> Analysis:
+    comps = parse_computations(hlo)
+    entry_name = None
+    # entry is the computation declared with `ENTRY` — our header regex drops
+    # the keyword, so find it from the original text.
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m:
+        entry_name = m.group(1)
+    if entry_name not in comps:
+        entry_name = max(comps, key=lambda c: len(comps[c].instructions))
+
+    # call graph: comp -> list of (callee, multiplier)
+    ana = Analysis()
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    fusion_bodies: set[str] = set()
+    reduce_bodies: set[str] = set()
+    for cname, comp in comps.items():
+        for inst in comp.instructions:
+            if inst.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", inst.rest)
+                cm_ = re.search(r"condition=%?([\w.\-]+)", inst.rest)
+                if bm and cm_:
+                    body, cond = bm.group(1), cm_.group(1)
+                    tm = _TRIP_CFG.search(inst.rest)   # XLA-annotated count
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        trips = _trip_count(comps[cond]) if cond in comps else None
+                        if trips is None:
+                            trips = 1
+                            ana.notes.append(f"unparsed trip count for {body}")
+                    ana.while_trip_counts[body] = trips
+                    edges[cname].append((body, float(trips)))
+                    edges[cname].append((cond, float(trips + 1)))
+            elif inst.opcode == "fusion":
+                fm = _CALLS.search(inst.rest)
+                if fm and fm.group(1) in comps:
+                    fusion_bodies.add(fm.group(1))
+                    edges[cname].append((fm.group(1), 1.0))
+            elif inst.opcode in ("call", "custom-call"):
+                am = re.search(r"to_apply=%?([\w.\-]+)", inst.rest)
+                if am and am.group(1) in comps:
+                    edges[cname].append((am.group(1), 1.0))
+            elif inst.opcode in ("reduce", "reduce-window", "scatter", "sort",
+                                 "map", "select-and-scatter", "all-reduce",
+                                 "reduce-scatter"):
+                am = re.search(r"to_apply=%?([\w.\-]+)", inst.rest)
+                if am and am.group(1) in comps:
+                    reduce_bodies.add(am.group(1))
+
+    # execution multiplier per computation: relaxation over the call DAG
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry_name] = 1.0
+    for _ in range(64):
+        new = {c: 0.0 for c in comps}
+        new[entry_name] = 1.0
+        for cname, outs in edges.items():
+            base = mult[cname]
+            if base == 0.0:
+                continue
+            for callee, k in outs:
+                new[callee] = new.get(callee, 0.0) + base * k
+        if new == mult:
+            break
+        mult = new
+
+    # per-computation costs
+    for cname, comp in comps.items():
+        m_ = mult.get(cname, 0.0)
+        if m_ == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        in_reduce = cname in reduce_bodies
+        for inst in comp.instructions:
+            if inst.opcode in ("dot", "convolution"):
+                ana.flops += m_ * _dot_flops(inst, comp)
+            if in_fusion or in_reduce:
+                continue  # fusion internals don't touch HBM
+            if inst.opcode in _FREE_OPS:
+                continue
+            rb = inst.result_bytes
+            if inst.opcode in _COLLECTIVES:
+                kind = inst.opcode.replace("-start", "")
+                wire = _collective_wire(kind, inst, comp, n_devices)
+                ana.collective_wire_bytes += m_ * wire
+                big_f32 = ("f32" in inst.shape_blob
+                           and "bf16" not in inst.shape_blob
+                           and rb > (1 << 20))
+                ana.collective_wire_bytes_bf16adj += m_ * wire * (
+                    0.5 if big_f32 else 1.0)
+                ana.collective_bytes_by_kind[kind] = (
+                    ana.collective_bytes_by_kind.get(kind, 0.0) + m_ * rb)
+                ana.collective_counts[kind] = (
+                    ana.collective_counts.get(kind, 0) + int(m_))
+                continue
+            ana.hbm_bytes += m_ * 2.0 * _mem_bytes(inst, comp, comps)
+            if inst.opcode == "convert" and "f32" in inst.shape_blob and \
+                    "bf16" in comp.defs.get(
+                        (re.match(r"([^),]*)", inst.rest).group(1) or "").strip().lstrip("%"), ""):
+                ana.bf16_upcast_bytes += m_ * 2.0 * rb
+    return ana
+
+
+def top_contributors(hlo: str, n: int = 12, n_devices: int = 1):
+    """Profiler view: the largest (bytes x multiplier) instructions.
+
+    Returns two lists (collectives, hbm) of dicts sorted by total bytes —
+    the 'what do I fix next' view for the §Perf hypothesis loop.
+    """
+    comps = parse_computations(hlo)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    entry = m.group(1) if m else max(comps, key=lambda c: len(comps[c].instructions))
+
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    fusion_bodies: set[str] = set()
+    for cname, comp in comps.items():
+        for inst in comp.instructions:
+            if inst.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", inst.rest)
+                cm_ = re.search(r"condition=%?([\w.\-]+)", inst.rest)
+                if bm and cm_:
+                    tm = _TRIP_CFG.search(inst.rest)
+                    trips = int(tm.group(1)) if tm else (
+                        _trip_count(comps.get(cm_.group(1), Computation(""))) or 1)
+                    edges[cname].append((bm.group(1), float(trips)))
+            elif inst.opcode == "fusion":
+                fm = _CALLS.search(inst.rest)
+                if fm and fm.group(1) in comps:
+                    fusion_bodies.add(fm.group(1))
+                    edges[cname].append((fm.group(1), 1.0))
+            elif inst.opcode in ("call",):
+                am = re.search(r"to_apply=%?([\w.\-]+)", inst.rest)
+                if am and am.group(1) in comps:
+                    edges[cname].append((am.group(1), 1.0))
+    mult = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for _ in range(64):
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for cname, outs in edges.items():
+            if mult[cname] == 0.0:
+                continue
+            for callee, k in outs:
+                new[callee] = new.get(callee, 0.0) + mult[cname] * k
+        if new == mult:
+            break
+        mult = new
+
+    colls, hbms = [], []
+    for cname, comp in comps.items():
+        m_ = mult.get(cname, 0.0)
+        if m_ == 0.0 or cname in fusion_bodies:
+            continue
+        for inst in comp.instructions:
+            rb = (inst.result_bytes if inst.opcode in _COLLECTIVES
+                  else _mem_bytes(inst, comp, comps))
+            rec = dict(op=inst.opcode, comp=cname, mult=m_,
+                       bytes=rb, total=m_ * rb,
+                       shape=inst.shape_blob.strip()[:80],
+                       meta=(re.search(r'op_name="([^"]*)"', inst.rest) or
+                             [None, ""])[1][:90])
+            if inst.opcode in _COLLECTIVES:
+                colls.append(rec)
+            elif inst.opcode not in _FREE_OPS:
+                hbms.append(rec)
+    colls.sort(key=lambda r: -r["total"])
+    hbms.sort(key=lambda r: -r["total"])
+    return colls[:n], hbms[:n]

@@ -1,0 +1,171 @@
+"""Roofline report from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s
+
+Terms (seconds, per step, per chip — the dry-run HLO is the per-device
+SPMD program, so analyzer totals are already per chip):
+
+    compute    = HLO_dot_FLOPs / 197e12
+    memory     = (HLO_HBM_bytes - bf16_upcast_artifact) / 819e9
+    collective = collective_wire_bytes / 50e9
+
+MODEL_FLOPS uses 6*N*D (train; D = tokens) / 2*N*D (inference), with
+N_active for MoE.  The MODEL/HLO ratio flags remat + redundant compute.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops_per_chip(r: dict) -> float:
+    """Analytic useful FLOPs per step per chip."""
+    shape = r["shape"]
+    n = r["param_count"]
+    n_act = r["active_param_count"]
+    chips = r["devices"]
+    if shape == "train_4k":
+        tokens = 256 * 4096
+        return 6.0 * n_act * tokens / chips
+    if shape == "prefill_32k":
+        tokens = 32 * 32768
+        return 2.0 * n_act * tokens / chips
+    if shape == "decode_32k":
+        return 2.0 * n_act * 128 / chips
+    if shape == "long_500k":
+        return 2.0 * n_act * 1 / chips
+    raise ValueError(shape)
+
+
+def terms(r: dict) -> dict:
+    a = r["analysis"]
+    comp = a["flops"] / PEAK_FLOPS
+    mem = max(a["hbm_bytes"] - a.get("bf16_upcast_bytes", 0), 0) / HBM_BW
+    # bf16-adjusted wire: XLA:CPU upcasts bf16 collectives to f32; the TPU
+    # lowering keeps them bf16 (see hlo_analysis module docs)
+    coll = a.get("collective_wire_bytes_bf16adj",
+                 a["collective_wire_bytes"]) / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda kv: kv[1])
+    mf = model_flops_per_chip(r)
+    return dict(
+        compute_s=comp, memory_s=mem, collective_s=coll,
+        dominant=dom[0], bound_s=dom[1],
+        model_flops=mf,
+        useful_ratio=(mf / a["flops"]) if a["flops"] else 0.0,
+        roofline_frac=(mf / PEAK_FLOPS) / dom[1] if dom[1] > 0 else 0.0,
+    )
+
+
+def remedy(r: dict, t: dict) -> str:
+    d = t["dominant"]
+    if d == "compute":
+        if t["useful_ratio"] < 0.5:
+            return ("compute-bound but <50% useful: relax remat policy / "
+                    "cut redundant recompute")
+        return "compute-bound near peak: raise arithmetic intensity per chip"
+    if d == "memory":
+        if "decode" in r["shape"] or r["shape"] == "long_500k":
+            return ("HBM-bound (expected for decode): shrink cache reads — "
+                    "quantize KV to int8 / wider batch per chip")
+        return "HBM-bound: fuse more, keep activations bf16, bigger tiles"
+    return ("collective-bound: overlap collectives with compute, reduce-"
+            "scatter instead of all-reduce, or reshard to cut volume")
+
+
+def build_rows(dryrun_dir: str, mesh: str = "single"):
+    rows = []
+    for f in sorted(os.listdir(dryrun_dir)):
+        if not f.endswith(".json") or f == "summary.json":
+            continue
+        r = json.load(open(os.path.join(dryrun_dir, f)))
+        if r.get("status") != "ok" or not f.endswith(f"__{mesh}.json"):
+            if r.get("status") == "skipped" and f.endswith(f"__{mesh}.json"):
+                rows.append((r, None))
+            continue
+        rows.append((r, terms(r)))
+    rows.sort(key=lambda rt: (rt[0]["arch"], ORDER.index(rt[0]["shape"])))
+    return rows
+
+
+def markdown(rows) -> str:
+    out = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL/HLO flops | roofline frac | what moves it |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r, t in rows:
+        if t is None:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — | "
+                f"{r['reason'][:60]}… |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+            f"{t['roofline_frac']:.2%} | {remedy(r, t)} |")
+    return "\n".join(out)
+
+
+def dryrun_markdown(dryrun_dir: str) -> str:
+    out = [
+        "| arch | shape | mesh | compile (s) | args/chip (GiB) | temp/chip "
+        "(GiB) | collectives (AG/AR/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for f in sorted(os.listdir(dryrun_dir)):
+        if not f.endswith(".json") or f == "summary.json":
+            continue
+        rows.append(json.load(open(os.path.join(dryrun_dir, f))))
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"]),
+                             r.get("mesh", "")))
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','both')} "
+                       f"| skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | "
+                       f"— | — | — |")
+            continue
+        m = r["memory"]
+        c = r["analysis"]["collective_counts"]
+        cc = "/".join(str(c.get(k, 0)) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{m.get('argument_size_in_bytes',0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes',0)/2**30:.2f} | {cc} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    rows = build_rows(args.dryrun, "single")
+    md = ["# Roofline (single pod, 16x16 = 256 chips)", "",
+          markdown(rows), "", "# Dry-run matrix", "",
+          dryrun_markdown(args.dryrun)]
+    text = "\n".join(md)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""LM substrate: composable pure-JAX model definitions for the assigned
+architectures (dense / MoE / MLA / SSM / xLSTM / hybrid / audio / VLM)."""
+from .model import build_model, init_params  # noqa: F401

@@ -1,0 +1,259 @@
+"""Attention: GQA (chunked flash-style + decode), sliding-window, MLA.
+
+Training/prefill use a memory-efficient online-softmax formulation that
+scans over KV chunks (the pure-JAX analogue of flash attention; the Pallas
+kernel in ``repro.kernels`` accelerates the same contraction on TPU).
+Decode attends one query position against the full KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mrope, apply_rope, init_linear, linear
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core: online-softmax attention over KV chunks
+# ---------------------------------------------------------------------------
+def chunked_attention(
+    q: jnp.ndarray,        # [B, S, H, dh]
+    k: jnp.ndarray,        # [B, T, Hkv, dh]
+    v: jnp.ndarray,        # [B, T, Hkv, dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: jnp.ndarray | int = 0,   # absolute position of q[0]
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks.  Returns [B,S,H,dv].
+
+    Heads stay FLAT: KV heads are repeated to H *inside* the chunk body
+    (one chunk at a time, so nothing [B,T,H,dh]-sized materializes).  This
+    keeps the sharding story trivial — either the H axis or the dh axis is
+    tensor-parallel, with no grouped reshapes for GSPMD to fight.
+    """
+    b, s, h, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qs = q * scale
+
+    kv_chunk = min(kv_chunk, t)
+    n_chunks = (t + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(s)                  # [S]
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        if g > 1:  # repeat KV heads chunk-locally
+            kb = jnp.repeat(kb, g, axis=2)
+            vb = jnp.repeat(vb, g, axis=2)
+        kv_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)           # [ckv]
+        sc = jnp.einsum("bshd,bthd->bhst", qs, kb).astype(jnp.float32)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((s, kv_chunk), bool)
+        mask = mask & (kv_pos[None, :] < t)
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))                         # [B,H,S]
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(vb.dtype), vb)
+        acc_new = acc * corr.transpose(0, 2, 1)[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, s, h, dv), v.dtype)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    denom = jnp.maximum(l, 1e-20).transpose(0, 2, 1)[..., None]
+    out = (acc.astype(jnp.float32) / denom).astype(q.dtype)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,        # [B, 1, H, dh]
+    k_cache: jnp.ndarray,  # [B, T, Hkv, dh]
+    v_cache: jnp.ndarray,  # [B, T, Hkv, dv]
+    cache_len: jnp.ndarray,  # int32[B] valid prefix length
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-position attention against a (masked) KV cache.
+
+    Grouped math (no KV repeat — the cache is the big object in decode);
+    the cache's T axis is the tensor-parallel one (flash-decoding style:
+    softmax max/sum and the PV product reduce over T with small
+    all-reduces)."""
+    b, _, h, dh = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qg = (q * scale).reshape(b, 1, hkv, g, dh)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache).astype(jnp.float32)
+    mask = jnp.arange(t)[None, :] < cache_len[:, None]   # [B, T]
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, v_cache.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA block (projections + rope + attention)
+# ---------------------------------------------------------------------------
+def init_gqa(rng, cfg, dtype):
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    r = jax.random.split(rng, 4)
+    return {
+        "wq": init_linear(r[0], d, (h, dh), bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(r[1], d, (hkv, dh), bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(r[2], d, (hkv, dh), bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(r[3], d, (h, dh), dtype=dtype),  # used transposed
+    }
+
+
+def _proj_qkv(x, p):
+    q = linear(x, p["wq"])
+    k = linear(x, p["wk"])
+    v = linear(x, p["wv"])
+    return q, k, v
+
+
+def _out_proj(o, p):
+    # o: [B,S,H,dh] x wo [d, H, dh] -> [B,S,d]
+    return jnp.einsum("bshd,mhd->bsm", o, p["wo"]["w"])
+
+
+def gqa_forward(x, p, cfg, pos, *, mrope_pos=None):
+    """Full-sequence (train/prefill) GQA.  pos: [B,S] absolute positions."""
+    q, k, v = _proj_qkv(x, p)
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    o = chunked_attention(
+        q, k, v, causal=True, window=cfg.sliding_window,
+        kv_chunk=cfg.attn_chunk_kv,
+    )
+    return _out_proj(o, p), (k, v)
+
+
+def gqa_decode(x, p, cfg, cache_k, cache_v, cache_len, pos, *, mrope_pos=None):
+    """One-token decode: append to cache, attend.  x: [B,1,d]."""
+    q, k, v = _proj_qkv(x, p)
+    if cfg.mrope_sections and mrope_pos is not None:
+        q = apply_mrope(q, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_pos, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    t = cache_k.shape[1]
+    if cfg.sliding_window and cfg.sliding_window < 0:
+        raise ValueError
+    # ring-buffer write for sliding-window caches, linear write otherwise
+    write_idx = (cache_len % t)                                    # int32[B]
+    cache_k = _cache_write(cache_k, k, write_idx)
+    cache_v = _cache_write(cache_v, v, write_idx)
+    new_len = jnp.minimum(cache_len + 1, t)
+    o = decode_attention(q, cache_k, cache_v, new_len)
+    return _out_proj(o, p), (cache_k, cache_v, cache_len + 1)
+
+
+def _cache_write(cache, val, idx):
+    """cache [B,T,...] <- val [B,1,...] at per-batch position idx (scatter:
+    touches one slot per sequence, not the whole cache)."""
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), idx].set(val[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+def init_mla(rng, cfg, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    r = jax.random.split(rng, 5)
+    return {
+        "wq": init_linear(r[0], d, (h, qk), dtype=dtype),
+        "w_dkv": init_linear(r[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dtype),
+        "w_uk": init_linear(r[2], m.kv_lora_rank, (h, m.qk_nope_head_dim), dtype=dtype),
+        "w_uv": init_linear(r[3], m.kv_lora_rank, (h, m.v_head_dim), dtype=dtype),
+        "wo": init_linear(r[4], d, (h, m.v_head_dim), dtype=dtype),
+    }
+
+
+def mla_forward(x, p, cfg, pos):
+    """Full-sequence MLA: expand the latent, run standard attention."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = linear(x, p["wq"])                                   # [B,S,H,qk]
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], pos, cfg.rope_theta)
+    ckv = linear(x, p["w_dkv"])                              # [B,S,r+rope]
+    c, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)  # [B,S,1,rope]
+    k_nope = jnp.einsum("bsr,rhd->bshd", c, p["w_uk"]["w"])
+    v = jnp.einsum("bsr,rhd->bshd", c, p["w_uv"]["w"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    o = chunked_attention(qq, k, v, causal=True, kv_chunk=cfg.attn_chunk_kv,
+                          scale=scale)
+    out = jnp.einsum("bshd,mhd->bsm", o, p["wo"]["w"])
+    return out, (c, k_rope[:, :, 0, :])
+
+
+def mla_decode(x, p, cfg, cache_c, cache_kr, cache_len, pos):
+    """Absorbed-matmul MLA decode: the cache holds only (c_kv, k_rope) —
+    the memory saving that is MLA's point.  x: [B,1,d]."""
+    m = cfg.mla
+    q = linear(x, p["wq"])                                   # [B,1,H,qk]
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim :], pos, cfg.rope_theta)
+    ckv = linear(x, p["w_dkv"])
+    c_new, kr_new = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank :]
+    kr_new = apply_rope(kr_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+
+    t = cache_c.shape[1]
+    idx = cache_len % t
+    cache_c = _cache_write(cache_c, c_new[:, None] if c_new.ndim == 2 else c_new, idx)
+    cache_kr = _cache_write(cache_kr, kr_new[:, None] if kr_new.ndim == 2 else kr_new, idx)
+    new_len = jnp.minimum(cache_len + 1, t)
+
+    # absorb W_uk into the query:  score = (q_nope W_uk) . c  +  q_rope . k_rope
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, p["w_uk"]["w"])   # [B,1,H,r]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    sc = (
+        jnp.einsum("bshr,btr->bhst", q_abs, cache_c)
+        + jnp.einsum("bshd,btd->bhst", q_rope, cache_kr)
+    ).astype(jnp.float32) * scale
+    mask = jnp.arange(t)[None, :] < new_len[:, None]
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(cache_c.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", pr, cache_c)               # [B,1,H,r]
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, p["w_uv"]["w"])
+    out = jnp.einsum("bshd,mhd->bsm", o, p["wo"]["w"])
+    return out, (cache_c, cache_kr, cache_len + 1)

@@ -1,0 +1,73 @@
+"""Vocabulary embedding + LM head, vocab-sharded, with an optional
+OrbitCache-style hot-row cache.
+
+The vocab-sharded table is a hash-partitioned KV store with Zipf-skewed
+keys (token ids).  ``hot_cache``: a small replicated table of the C most
+popular rows — chosen by the same CMS/top-k controller machinery as the
+switch cache — serves hot lookups without touching the sharded table.
+For dense XLA programs the collective cost of a gather is shape-static, so
+the hot cache's measurable win is in the *serving* path (small decode
+batches resolve entirely locally when all ids are hot) and in the orbit KV
+service; training keeps the plain sharded gather.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingCtx, with_sharding
+
+
+class HotCache(NamedTuple):
+    ids: jnp.ndarray     # int32[C] sorted hot token ids (-1 pad at the end)
+    rows: jnp.ndarray    # [C, d] replicated rows
+    version: jnp.ndarray # int32[] bumped by the controller on refresh
+
+
+def init_embedding(rng, vocab: int, d: int, dtype, tie: bool = False):
+    scale = d ** -0.5
+    table = (jax.random.normal(rng, (vocab, d), jnp.float32) * scale).astype(dtype)
+    p = {"table": table}
+    if not tie:
+        r2 = jax.random.fold_in(rng, 1)
+        p["head"] = (jax.random.normal(r2, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return p
+
+
+def embed(tokens: jnp.ndarray, p, ctx: Optional[ShardingCtx] = None) -> jnp.ndarray:
+    """tokens [B,S] -> [B,S,d].  Table sharded on vocab; GSPMD lowers the
+    gather to a local masked take + all-reduce over the model axis."""
+    out = jnp.take(p["table"], tokens, axis=0)
+    return with_sharding(ctx, out, "batch", None, None)
+
+
+def embed_hot(tokens: jnp.ndarray, p, hot: HotCache,
+              ctx: Optional[ShardingCtx] = None) -> jnp.ndarray:
+    """Hot-cache lookup: replicated rows for cached ids, sharded gather for
+    the rest (serving path)."""
+    c = hot.ids.shape[0]
+    slot = jnp.searchsorted(hot.ids, tokens)
+    slot = jnp.clip(slot, 0, c - 1)
+    is_hot = hot.ids[slot] == tokens
+    hot_rows = jnp.take(hot.rows, slot, axis=0)
+    cold_rows = embed(jnp.where(is_hot, 0, tokens), p, ctx)
+    return jnp.where(is_hot[..., None], hot_rows, cold_rows)
+
+
+def logits(x: jnp.ndarray, p, ctx: Optional[ShardingCtx] = None,
+           tie: bool = False) -> jnp.ndarray:
+    """x [B,S,d] -> [B,S,V] (vocab-sharded on the model axis)."""
+    w = p["table"] if tie or "head" not in p else p["head"]
+    out = jnp.einsum("bsd,vd->bsv", x, w)
+    return with_sharding(ctx, out, "batch", None, "vocab")
+
+
+def refresh_hot_cache(p, counts: jnp.ndarray, size: int) -> HotCache:
+    """Controller step: pick the ``size`` most frequent token ids from the
+    observed counts (CMS estimates or exact) and snapshot their rows."""
+    top = jnp.argsort(-counts)[:size]
+    ids = jnp.sort(top).astype(jnp.int32)
+    rows = jnp.take(p["table"], ids, axis=0)
+    return HotCache(ids=ids, rows=rows, version=jnp.zeros((), jnp.int32))

@@ -1,0 +1,120 @@
+"""Common layers: RMSNorm, SwiGLU MLP, linear init, RoPE and M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init / linear
+# ---------------------------------------------------------------------------
+def init_linear(rng, d_in: int, d_out, bias: bool = False, scale: float = 0.02,
+                dtype=jnp.bfloat16):
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    p = {"w": (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros(shape[1:], dtype)
+    return p
+
+
+def linear(x: jnp.ndarray, p) -> jnp.ndarray:
+    nd = p["w"].ndim - 1
+    y = jax.lax.dot_general(
+        x, p["w"], (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.bfloat16):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x: jnp.ndarray, p, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["g"]
+
+
+def init_groupnorm(heads: int, d: int, dtype=jnp.bfloat16):
+    return {"g": jnp.ones((heads, d), dtype)}
+
+
+def groupnorm_heads(x: jnp.ndarray, p, eps: float = 1e-5) -> jnp.ndarray:
+    """Per-head RMS norm over the head dim: x [..., H, dh]."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(rng, d: int, d_ff: int, dtype=jnp.bfloat16):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "gate": init_linear(r1, d, d_ff, dtype=dtype),
+        "up": init_linear(r2, d, d_ff, dtype=dtype),
+        "down": init_linear(r3, d_ff, d, dtype=dtype),
+    }
+
+
+def mlp(x: jnp.ndarray, p) -> jnp.ndarray:
+    return linear(jax.nn.silu(linear(x, p["gate"])) * linear(x, p["up"]), p["down"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, dh]; pos: [B, S] (int) -> rotated x (pairwise halves)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs    # [B, S, dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, pos3: jnp.ndarray, sections: tuple[int, ...],
+                theta: float) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, dh]; pos3: [3, B, S] (temporal, height, width positions).
+    ``sections`` split dh/2 frequency slots among the three position kinds.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    # pick which position stream drives each frequency slot
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])
+    sec = sec[: dh // 2]
+    pos_sel = jnp.take_along_axis(
+        pos3.transpose(1, 2, 0).astype(jnp.float32),    # [B, S, 3]
+        jnp.broadcast_to(sec[None, None, :], x.shape[:2] + (dh // 2,)),
+        axis=-1,
+    )                                                    # [B, S, dh/2]
+    ang = pos_sel * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

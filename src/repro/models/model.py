@@ -1,0 +1,402 @@
+"""Model facade: init / forward (train & prefill) / decode for every family.
+
+``build_model(cfg)`` returns a ``Model`` with pure functions; parameters and
+decode states are pytrees whose leading axes follow the unit-scan layout of
+``transformer.py`` (so layers scan instead of unrolling — small HLO, fast
+512-device compiles).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ShardingCtx, with_sharding
+
+from . import attention as attn_mod
+from . import embedding as emb
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import dtype_of, init_rmsnorm, rmsnorm
+from .transformer import (
+    attn_mlp_decode,
+    attn_mlp_forward,
+    init_attn_mlp_block,
+    scan_layers,
+    stacked_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(rng, cfg: ModelConfig):
+    dt = dtype_of(cfg.dtype)
+    r_emb, r_blocks, r_out = jax.random.split(rng, 3)
+    params: dict[str, Any] = {"final_norm": init_rmsnorm(cfg.d_model, dt)}
+
+    if cfg.num_codebooks:  # musicgen: K codebook embeddings + K heads
+        scale = cfg.d_model ** -0.5
+        params["embed"] = {
+            "codebooks": (jax.random.normal(
+                r_emb, (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                jnp.float32) * scale).astype(dt),
+            "heads": (jax.random.normal(
+                jax.random.fold_in(r_emb, 1),
+                (cfg.num_codebooks, cfg.vocab_size, cfg.d_model),
+                jnp.float32) * 0.02).astype(dt),
+        }
+    else:
+        params["embed"] = emb.init_embedding(
+            r_emb, cfg.vocab_size, cfg.d_model, dt, tie=cfg.tie_embeddings)
+
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        params["blocks"] = stacked_init(
+            lambda r: init_attn_mlp_block(r, cfg, dt, use_moe=False),
+            r_blocks, cfg.num_layers)
+    elif fam == "moe":
+        fd = cfg.moe.first_dense_layers
+        if fd:
+            params["dense_blocks"] = stacked_init(
+                lambda r: init_attn_mlp_block(r, cfg, dt, use_moe=False),
+                jax.random.fold_in(r_blocks, 7), fd)
+        params["blocks"] = stacked_init(
+            lambda r: init_attn_mlp_block(r, cfg, dt, use_moe=True),
+            r_blocks, cfg.num_layers - fd)
+    elif fam == "ssm":  # xlstm
+        k = cfg.xlstm.slstm_every
+        units = cfg.num_layers // k
+        params["mlstm"] = stacked_init(
+            lambda r: jax.vmap(
+                lambda rr: xlstm_mod.init_mlstm_block(rr, cfg, dt)
+            )(jax.random.split(r, k - 1)),
+            r_blocks, units)
+        params["slstm"] = stacked_init(
+            lambda r: xlstm_mod.init_slstm_block(r, cfg, dt),
+            jax.random.fold_in(r_blocks, 3), units)
+    elif fam == "hybrid":  # zamba2
+        k = cfg.attn_every
+        lead = cfg.num_layers % k
+        units = cfg.num_layers // k
+        if lead:
+            params["mamba_lead"] = stacked_init(
+                lambda r: ssm_mod.init_mamba2(r, cfg, dt),
+                jax.random.fold_in(r_blocks, 5), lead)
+        params["mamba"] = stacked_init(
+            lambda r: jax.vmap(
+                lambda rr: ssm_mod.init_mamba2(rr, cfg, dt)
+            )(jax.random.split(r, k)),
+            r_blocks, units)
+        params["shared_attn"] = attn_mod.init_gqa(
+            jax.random.fold_in(r_blocks, 9), cfg, dt)
+        params["shared_ln"] = init_rmsnorm(cfg.d_model, dt)
+        if cfg.d_ff:
+            from .layers import init_mlp
+            params["shared_mlp"] = init_mlp(
+                jax.random.fold_in(r_blocks, 11), cfg.d_model, cfg.d_ff, dt)
+            params["shared_ln2"] = init_rmsnorm(cfg.d_model, dt)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# input embedding per family
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg, ctx):
+    if cfg.num_codebooks:
+        if "frame_embeds" in batch:        # audio stub frontend (train)
+            x = batch["frame_embeds"]
+        else:                              # decode: sum codebook embeddings
+            codes = batch["codes"]         # [B, S, K]
+            x = jnp.einsum(
+                "bskd->bsd",
+                jnp.stack([
+                    jnp.take(params["embed"]["codebooks"][k], codes[..., k], axis=0)
+                    for k in range(cfg.num_codebooks)
+                ], axis=2))
+        return x, None
+    tokens = batch["tokens"]
+    x = emb.embed(tokens, params["embed"], ctx)
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    return x, batch.get("mrope_pos")
+
+
+def _head(params, x, cfg, ctx):
+    if cfg.num_codebooks:
+        return jnp.einsum("bsd,kvd->bskv", x, params["embed"]["heads"])
+    return emb.logits(x, params["embed"], ctx, tie=cfg.tie_embeddings)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, batch, cfg: ModelConfig, ctx: Optional[ShardingCtx] = None):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    x, mrope_pos = _embed_inputs(params, batch, cfg, ctx)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = with_sharding(ctx, x, "batch", None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "vlm", "moe"):
+        def make_body(use_moe):
+            def body(carry, blk):
+                h, aux = carry
+                # inter-layer residual: sequence-parallel when enabled
+                # (boundary activations shard S over the model axis)
+                h = with_sharding(ctx, h, "batch", "seq", None)
+                h2, _kv, aux_l = attn_mlp_forward(
+                    h, blk, cfg, pos, use_moe, mrope_pos=mrope_pos, ctx=ctx)
+                return (h2, aux + aux_l), None
+            return body
+        if fam == "moe" and cfg.moe.first_dense_layers:
+            (x, aux_total), _ = scan_layers(
+                (x, aux_total), params["dense_blocks"], make_body(False), cfg.remat)
+        use_moe = fam == "moe"
+        (x, aux_total), _ = scan_layers(
+            (x, aux_total), params["blocks"], make_body(use_moe), cfg.remat)
+
+    elif fam == "ssm":  # xlstm unit scan
+        k = cfg.xlstm.slstm_every
+        def body(carry, unit):
+            h, aux = carry
+            mblocks, sblock = unit
+            for i in range(k - 1):
+                blk = jax.tree.map(lambda t: t[i], mblocks)
+                y, _ = xlstm_mod.mlstm_forward(h, blk, cfg)
+                h = h + y
+            y, _ = xlstm_mod.slstm_forward(h, sblock, cfg)
+            h = h + y
+            return (h, aux), None
+        (x, aux_total), _ = scan_layers(
+            (x, aux_total), (params["mlstm"], params["slstm"]), body, cfg.remat)
+
+    elif fam == "hybrid":  # zamba2 unit scan, shared attention block
+        k = cfg.attn_every
+        shared = params["shared_attn"]
+        shared_ln = params["shared_ln"]
+        if "mamba_lead" in params:
+            def lead_body(carry, blk):
+                h, aux = carry
+                y, _ = ssm_mod.mamba2_forward(h, blk, cfg)
+                return (h + y, aux), None
+            (x, aux_total), _ = scan_layers(
+                (x, aux_total), params["mamba_lead"], lead_body, cfg.remat)
+        def body(carry, mblocks):
+            h, aux = carry
+            for i in range(k):
+                if i == k - 1:  # shared full-attention (+MLP) block
+                    a, _ = attn_mod.gqa_forward(
+                        rmsnorm(h, shared_ln, cfg.norm_eps), shared, cfg, pos)
+                    h = h + a
+                    if "shared_mlp" in params:
+                        from .layers import mlp as mlp_fn
+                        h = h + mlp_fn(
+                            rmsnorm(h, params["shared_ln2"], cfg.norm_eps),
+                            params["shared_mlp"])
+                blk = jax.tree.map(lambda t: t[i], mblocks)
+                y, _ = ssm_mod.mamba2_forward(h, blk, cfg)
+                h = h + y
+            return (h, aux), None
+        (x, aux_total), _ = scan_layers(
+            (x, aux_total), params["mamba"], body, cfg.remat)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _head(params, x, cfg, ctx), aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None):
+    """Fresh decode state sized for ``cache_len`` past tokens."""
+    dt = dtype or dtype_of(cfg.dtype)
+    fam = cfg.family
+    hd = cfg.resolved_head_dim
+    state: dict[str, Any] = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    t = cache_len if not cfg.sliding_window else min(cache_len, cfg.sliding_window)
+    if fam in ("dense", "audio", "vlm", "moe"):
+        n = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+        fd = cfg.moe.first_dense_layers if cfg.moe else 0
+        def mk_kv(layers):
+            if cfg.attn_type == "mla":
+                m = cfg.mla
+                return (
+                    jnp.zeros((layers, batch, t, m.kv_lora_rank), dt),
+                    jnp.zeros((layers, batch, t, m.qk_rope_head_dim), dt),
+                )
+            return (
+                jnp.zeros((layers, batch, t, cfg.num_kv_heads, hd), dt),
+                jnp.zeros((layers, batch, t, cfg.num_kv_heads, hd), dt),
+            )
+        if fd:
+            state["dense_cache"] = mk_kv(fd)
+        state["cache"] = mk_kv(n)
+    elif fam == "ssm":
+        k = cfg.xlstm.slstm_every
+        units = cfg.num_layers // k
+        d_inner, heads, dh = xlstm_mod.mlstm_dims(cfg)
+        state["mlstm"] = xlstm_mod.MLSTMState(
+            c=jnp.zeros((units, k - 1, batch, heads, dh, dh), jnp.float32),
+            n=jnp.zeros((units, k - 1, batch, heads, dh), jnp.float32),
+            m=jnp.full((units, k - 1, batch, heads), -1e30, jnp.float32),
+        )
+        sdh = cfg.d_model // cfg.num_heads
+        state["slstm"] = xlstm_mod.SLSTMState(
+            c=jnp.zeros((units, batch, cfg.num_heads, sdh), jnp.float32),
+            n=jnp.full((units, batch, cfg.num_heads, sdh), 1e-6, jnp.float32),
+            m=jnp.full((units, batch, cfg.num_heads, sdh), -1e30, jnp.float32),
+            h=jnp.zeros((units, batch, cfg.num_heads, sdh), jnp.float32),
+        )
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        units = cfg.num_layers // k
+        lead = cfg.num_layers % k
+        d_inner, heads, dh, n_ssm = ssm_mod.ssm_dims(cfg)
+        cw = cfg.ssm.conv_width
+        def mk_ssm(shape_prefix):
+            return ssm_mod.SSMState(
+                h=jnp.zeros(shape_prefix + (batch, heads, dh, n_ssm), jnp.float32),
+                conv_x=jnp.zeros(shape_prefix + (batch, cw - 1, d_inner), dt),
+                conv_bc=jnp.zeros(shape_prefix + (batch, cw - 1, 2 * n_ssm), dt),
+            )
+        if lead:
+            state["lead"] = mk_ssm((lead,))
+        state["mamba"] = mk_ssm((units, k))
+        state["attn_cache"] = (
+            jnp.zeros((units, batch, t, cfg.num_kv_heads, hd), dt),
+            jnp.zeros((units, batch, t, cfg.num_kv_heads, hd), dt),
+        )
+    return state
+
+
+def decode_step(params, state, batch, cfg: ModelConfig,
+                ctx: Optional[ShardingCtx] = None):
+    """One-token decode.  batch: {"tokens": [B,1]} (or codes for audio).
+    Returns (logits, new_state)."""
+    x, mrope_pos = _embed_inputs(params, batch, cfg, ctx)
+    b = x.shape[0]
+    pos = state["pos"][:, None]
+    cache_len = state["len"]
+    new_state = dict(state)
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "vlm", "moe"):
+        use_moe = fam == "moe"
+        fd = cfg.moe.first_dense_layers if (cfg.moe and use_moe) else 0
+        def make_body(u_moe):
+            def body(h, xs):
+                blk, ck, cv = xs
+                h2, (nck, ncv) = attn_mlp_decode(
+                    h, blk, cfg, (ck, cv), cache_len, pos, u_moe,
+                    mrope_pos=mrope_pos)
+                return h2, (nck, ncv)
+            return body
+        if fd:
+            ck, cv = state["dense_cache"]
+            x, new_dc = jax.lax.scan(
+                make_body(False), x, (params["dense_blocks"], ck, cv))
+            new_state["dense_cache"] = new_dc
+        ck, cv = state["cache"]
+        x, new_c = jax.lax.scan(make_body(use_moe), x, (params["blocks"], ck, cv))
+        new_state["cache"] = new_c
+
+    elif fam == "ssm":
+        k = cfg.xlstm.slstm_every
+        def body(h, xs):
+            mblocks, sblock, mstate, sstate = xs
+            new_ms = []
+            for i in range(k - 1):
+                blk = jax.tree.map(lambda t: t[i], mblocks)
+                mst = jax.tree.map(lambda t: t[i], mstate)
+                y, nst = xlstm_mod.mlstm_decode(h, blk, cfg, mst)
+                h = h + y
+                new_ms.append(nst)
+            new_mstate = jax.tree.map(lambda *ts: jnp.stack(ts), *new_ms)
+            y, new_sstate = xlstm_mod.slstm_forward(h, sblock, cfg, sstate)
+            h = h + y
+            return h, (new_mstate, new_sstate)
+        x, (new_m, new_s) = jax.lax.scan(
+            body, x, (params["mlstm"], params["slstm"],
+                      state["mlstm"], state["slstm"]))
+        new_state["mlstm"], new_state["slstm"] = new_m, new_s
+
+    elif fam == "hybrid":
+        k = cfg.attn_every
+        shared, shared_ln = params["shared_attn"], params["shared_ln"]
+        if "lead" in params or "lead" in state:
+            def lead_body(h, xs):
+                blk, st = xs
+                y, nst = ssm_mod.mamba2_decode(h, blk, cfg, st)
+                return h + y, nst
+            x, new_lead = jax.lax.scan(
+                lead_body, x, (params["mamba_lead"], state["lead"]))
+            new_state["lead"] = new_lead
+        def body(h, xs):
+            mblocks, mstate, ck, cv = xs
+            new_ms = []
+            new_cache = None
+            for i in range(k):
+                if i == k - 1:
+                    a, (nck, ncv, _) = attn_mod.gqa_decode(
+                        rmsnorm(h, shared_ln, cfg.norm_eps), shared, cfg,
+                        ck, cv, cache_len, pos)
+                    h = h + a
+                    new_cache = (nck, ncv)
+                    if "shared_mlp" in params:
+                        from .layers import mlp as mlp_fn
+                        h = h + mlp_fn(
+                            rmsnorm(h, params["shared_ln2"], cfg.norm_eps),
+                            params["shared_mlp"])
+                blk = jax.tree.map(lambda t: t[i], mblocks)
+                st = jax.tree.map(lambda t: t[i], mstate)
+                y, nst = ssm_mod.mamba2_decode(h, blk, cfg, st)
+                h = h + y
+                new_ms.append(nst)
+            new_mstate = jax.tree.map(lambda *ts: jnp.stack(ts), *new_ms)
+            return h, (new_mstate, new_cache[0], new_cache[1])
+        ck, cv = state["attn_cache"]
+        x, (new_m, nck, ncv) = jax.lax.scan(
+            body, x, (params["mamba"], state["mamba"], ck, cv))
+        new_state["mamba"] = new_m
+        new_state["attn_cache"] = (nck, ncv)
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    lg = _head(params, x, cfg, ctx)
+    new_state["pos"] = state["pos"] + 1
+    new_state["len"] = state["len"] + 1
+    return lg, new_state
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_decode_state: Callable
+    decode_step: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda rng: init_params(rng, cfg),
+        forward=lambda p, batch, ctx=None: forward(p, batch, cfg, ctx),
+        init_decode_state=lambda b, t, dtype=None: init_decode_state(cfg, b, t, dtype),
+        decode_step=lambda p, st, batch, ctx=None: decode_step(p, st, batch, cfg, ctx),
+    )

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) blocks for the hybrid architecture (zamba2).
+
+Chunked state-space-dual algorithm: within a chunk the recurrence is
+evaluated in quadratic (attention-like) form; states are carried across
+chunks with a scan.  Decode is the O(1) recurrent update.
+
+Layout follows mamba2 with ngroups=1:
+  in_proj: d -> (z | x | B | C | dt)   z,x: d_inner; B,C: state N; dt: heads
+  causal depthwise conv over (x | B | C)
+  y = SSD(x, dt, A, B, C) + D*x ; out = out_proj(y * silu(z))
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray         # [B, H, dh, N] recurrent state
+    conv_x: jnp.ndarray    # [B, conv_width-1, d_inner] conv tail (x path)
+    conv_bc: jnp.ndarray   # [B, conv_width-1, 2N] conv tail (B/C path)
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = s.num_heads or d_inner // s.head_dim
+    return d_inner, heads, s.head_dim, s.state_dim
+
+
+def init_mamba2(rng, cfg, dtype):
+    """Projections are split (z | x | BC | dt) so each tensor has a clean
+    tensor-parallel axis (d_inner = heads x head_dim shards on heads; the
+    tiny B/C/dt projections replicate)."""
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, heads, dh, n = ssm_dims(cfg)
+    r = jax.random.split(rng, 6)
+    return {
+        "in_z": init_linear(r[0], d, d_inner, dtype=dtype),
+        "in_x": init_linear(r[1], d, d_inner, dtype=dtype),
+        "in_bc": init_linear(r[2], d, 2 * n, dtype=dtype),
+        "in_dt": init_linear(r[3], d, heads, dtype=dtype),
+        "conv_x_w": (jax.random.normal(r[4], (s.conv_width, d_inner), jnp.float32)
+                     * 0.02).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(jax.random.fold_in(r[4], 1),
+                                        (s.conv_width, 2 * n), jnp.float32)
+                      * 0.02).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(heads), heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "out_proj": init_linear(r[5], d_inner, d, dtype=dtype),
+        "norm_g": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv: x [B,S,C], w [W,C].  tail: [B,W-1,C] history."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    new_tail = xp[:, -(width - 1):, :] if width > 1 else tail
+    return jax.nn.silu(out + b), new_tail
+
+
+def _gated_norm(y, z, g, eps=1e-5):
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)).astype(y.dtype) * g
+
+
+def mamba2_forward(x, p, cfg, state: SSMState | None = None):
+    """Full-sequence chunked SSD.  x: [B,S,d] -> (y, final SSMState)."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    d_inner, heads, dh, n = ssm_dims(cfg)
+    z = linear(x, p["in_z"])
+    xin = linear(x, p["in_x"])
+    bc = linear(x, p["in_bc"])
+    dt_raw = linear(x, p["in_dt"])
+
+    tail_x = None if state is None else state.conv_x
+    tail_bc = None if state is None else state.conv_bc
+    xin, tail_x2 = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"], tail_x)
+    bc_out, tail_bc2 = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], tail_bc)
+    bmat = bc_out[..., :n]                                       # [B,S,N]
+    cmat = bc_out[..., n:]                                       # [B,S,N]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                     # [H]
+    xh = xin.reshape(b, s, heads, dh)
+
+    ch = s_cfg.chunk
+    n_chunks = (s + ch - 1) // ch
+    pad = n_chunks * ch - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    # [n_chunks, B, ch, ...]
+    rs = lambda t: t.reshape(b, n_chunks, ch, *t.shape[2:]).transpose(
+        1, 0, 2, *range(3, t.ndim + 1))
+    xc, dtc, bc_, cc_ = rs(xh), rs(dt), rs(bmat), rs(cmat)
+
+    h0 = jnp.zeros((b, heads, dh, n), jnp.float32) if state is None else state.h
+
+    def chunk_step(h, xs):
+        xk, dtk, bk, ck = xs                    # [B,ch,H,dh], [B,ch,H], [B,ch,N]
+        da = dtk * a                            # [B,ch,H] log-decay per step
+        cum = jnp.cumsum(da, axis=1)            # [B,ch,H]
+        # intra-chunk (attention-like): L[i,j] = exp(cum_i - cum_j) for i>=j.
+        # Mask BEFORE exp: the upper triangle has cum_i - cum_j > 0 and can
+        # overflow, poisoning gradients through the where.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]            # [B,i,j,H]
+        causal = jnp.tril(jnp.ones((ch, ch), bool))
+        l_mat = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+        cb = jnp.einsum("bin,bjn->bij", ck, bk).astype(jnp.float32)  # [B,i,j]
+        w = cb[..., None] * l_mat * dtk[:, None, :, :]            # [B,i,j,H]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w, xk.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state (pairwise
+        # contractions — 3-operand einsums materialize [B,S,H,dh,N]-sized
+        # intermediates, §Perf iteration 1)
+        y_inter = jnp.einsum("bin,bhdn->bihd", ck, h) * jnp.exp(cum)[..., None]
+        # state update: h' = exp(sum da) h + sum_j exp(cum_last - cum_j) dt_j B_j x_j
+        decay_all = jnp.exp(cum[:, -1:, :])                       # [B,1,H]
+        rev = jnp.exp(cum[:, -1:, :] - cum) * dtk                 # [B,ch,H]
+        xw = xk.astype(jnp.float32) * rev[..., None]              # [B,ch,H,dh]
+        dh_new = jnp.einsum("bjn,bjhd->bhdn", bk, xw)
+        h_new = h * decay_all[:, 0, :, None, None] + dh_new
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, bc_, cc_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * ch, heads, dh)[:, :s]
+    y = y + xh[:, :s].astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_g"])
+    out = linear(y, p["out_proj"])
+    return out, SSMState(h=h_final, conv_x=tail_x2, conv_bc=tail_bc2)
+
+
+def mamba2_decode(x, p, cfg, state: SSMState):
+    """Single-token recurrent update.  x: [B,1,d]."""
+    b = x.shape[0]
+    d_inner, heads, dh, n = ssm_dims(cfg)
+    z = linear(x, p["in_z"])
+    xin = linear(x, p["in_x"])
+    bc = linear(x, p["in_bc"])
+    dt_raw = linear(x, p["in_dt"])
+
+    xin, tail_x2 = _causal_conv(xin, p["conv_x_w"], p["conv_x_b"], state.conv_x)
+    bc_out, tail_bc2 = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], state.conv_bc)
+    bvec = bc_out[:, 0, :n]                                      # [B,N]
+    cvec = bc_out[:, 0, n:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    xh = xin[:, 0].reshape(b, heads, dh).astype(jnp.float32)
+
+    decay = jnp.exp(dt * a)                                      # [B,H]
+    h_new = (
+        state.h * decay[:, :, None, None]
+        + dt[:, :, None, None] * xh[..., None] * bvec[:, None, None, :]
+    )
+    y = jnp.einsum("bhdn,bn->bhd", h_new, cvec)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_g"])
+    return linear(y, p["out_proj"]), SSMState(h=h_new, conv_x=tail_x2, conv_bc=tail_bc2)

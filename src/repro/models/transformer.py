@@ -1,0 +1,106 @@
+"""Block composition: pre-norm residual blocks for every family, plus the
+layer-stacking machinery (scan over stacked params, optional remat).
+
+Families map to repeating *units* so heterogeneous stacks still scan:
+
+  dense / audio / vlm   unit = [attn, mlp]                        x L
+  moe                   unit = [attn, moe] (first k layers dense) x L
+  ssm (xlstm)           unit = [mLSTM x (k-1), sLSTM]             x L/k
+  hybrid (zamba2)       unit = [mamba x (k-1), shared-attn+mamba] x L/k
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def stacked_init(fn, rng, n: int):
+    """vmap an init fn over per-layer rngs -> stacked [n, ...] params."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(fn)(rngs)
+
+
+def init_attn_mlp_block(rng, cfg, dtype, use_moe: bool):
+    r1, r2 = jax.random.split(rng)
+    a = (attn.init_mla(r1, cfg, dtype) if cfg.attn_type == "mla"
+         else attn.init_gqa(r1, cfg, dtype))
+    f = (moe_mod.init_moe(r2, cfg, dtype) if use_moe
+         else init_mlp(r2, cfg.d_model, cfg.d_ff, dtype))
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, dtype),
+        "attn": a,
+        "ln2": init_rmsnorm(cfg.d_model, dtype),
+        "ffn": f,
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (full sequence)
+# ---------------------------------------------------------------------------
+def attn_mlp_forward(x, blk, cfg, pos, use_moe: bool, mrope_pos=None, ctx=None):
+    """Pre-norm attn + (mlp|moe).  Returns (x, kv, aux_loss)."""
+    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, kv = attn.mla_forward(h, blk["attn"], cfg, pos)
+    else:
+        a, kv = attn.gqa_forward(h, blk["attn"], cfg, pos, mrope_pos=mrope_pos)
+    x = x + a
+    h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, stats = moe_mod.moe_layer(h, blk["ffn"], cfg, ctx)
+        aux = stats.aux_loss
+    else:
+        f = mlp(h, blk["ffn"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, kv, aux
+
+
+def attn_mlp_decode(x, blk, cfg, cache, cache_len, pos, use_moe: bool,
+                    mrope_pos=None):
+    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_decode(
+            h, blk["attn"], cfg, cache[0], cache[1], cache_len, pos)
+        new_cache = (new_cache[0], new_cache[1])
+        new_len = cache_len + 1
+    else:
+        a, (ck, cv, new_len) = attn.gqa_decode(
+            h, blk["attn"], cfg, cache[0], cache[1], cache_len, pos,
+            mrope_pos=mrope_pos)
+        new_cache = (ck, cv)
+    x = x + a
+    h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+    f = (moe_mod.moe_layer(h, blk["ffn"], cfg)[0] if use_moe
+         else mlp(h, blk["ffn"]))
+    return x + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacked scan with remat
+# ---------------------------------------------------------------------------
+def scan_layers(x, stacked, body, remat: bool, carry_extra=None):
+    """Scan ``body`` over stacked layer params.
+
+    body(x, layer_params) -> (x, ys)
+    """
+    f = body
+    if remat:
+        f = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def step(carry, layer_p):
+        return f(carry, layer_p)
+
+    return jax.lax.scan(step, x, stacked)

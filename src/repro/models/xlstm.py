@@ -1,0 +1,260 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, truly recurrent) — for the xlstm-1.3b architecture.
+
+mLSTM uses exponential input gating and sigmoid forget gating with the
+log-domain stabilizer ``m``; training/prefill run the chunkwise algorithm
+(quadratic within a chunk, recurrent across chunks), decode runs the O(1)
+recurrence on the (C, n, m) state.
+
+sLSTM has a genuine hidden-state recurrence (R h_{t-1} enters the gates) so
+it scans over time; its state is per-head scalar memory (c, n, m, h).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import groupnorm_heads, init_groupnorm, init_linear, linear
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, H, dk, dv] matrix memory
+    n: jnp.ndarray   # [B, H, dk]
+    m: jnp.ndarray   # [B, H]
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # [B, H, dh]
+    n: jnp.ndarray   # [B, H, dh]
+    m: jnp.ndarray   # [B, H, dh]
+    h: jnp.ndarray   # [B, H, dh]
+
+
+def mlstm_dims(cfg):
+    d_inner = int(cfg.d_model * cfg.xlstm.proj_factor)
+    heads = cfg.num_heads
+    return d_inner, heads, d_inner // heads
+
+
+def init_mlstm_block(rng, cfg, dtype):
+    d = cfg.d_model
+    d_inner, heads, dh = mlstm_dims(cfg)
+    r = jax.random.split(rng, 8)
+    return {
+        "up_x": init_linear(r[0], d, d_inner, dtype=dtype),
+        "up_g": init_linear(jax.random.fold_in(r[0], 1), d, d_inner, dtype=dtype),
+        "wq": init_linear(r[1], d_inner, d_inner, dtype=dtype),
+        "wk": init_linear(r[2], d_inner, d_inner, dtype=dtype),
+        "wv": init_linear(r[3], d_inner, d_inner, dtype=dtype),
+        "wi": init_linear(r[4], d_inner, heads, dtype=jnp.float32),
+        "wf": init_linear(r[5], d_inner, heads, dtype=jnp.float32),
+        "gn": init_groupnorm(heads, dh, dtype),
+        "down": init_linear(r[6], d_inner, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state: MLSTMState):
+    """One chunk of the chunkwise mLSTM.
+
+    q,k,v: [B,L,H,dk/dv]; li/lf: [B,L,H] log input/forget gates.
+    Returns (h [B,L,H,dv], new state).  All math in float32.
+    """
+    b, l, h, dk = q.shape
+    lf_cum = jnp.cumsum(lf, axis=1)                               # [B,L,H]
+    # intra-chunk log weights: D[t,s] = lf_cum[t] - lf_cum[s] + li[s], s<=t
+    dmat = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + li[:, None, :, :]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    # stabilizer per (b, t, h)
+    m_intra = jnp.max(dmat, axis=2)                               # [B,L,H]
+    m_inter = state.m[:, None, :] + lf_cum                        # [B,L,H]
+    m_t = jnp.maximum(m_intra, m_inter)
+    d_exp = jnp.exp(dmat - m_t[:, :, None, :])                    # [B,L,L,H]
+
+    qk = jnp.einsum("blhd,bshd->blsh", q, k) * (dk ** -0.5)       # [B,L,S,H]
+    w = qk * d_exp
+    h_intra = jnp.einsum("blsh,bshv->blhv", w, v)
+    denom_intra = jnp.einsum("blsh,bsh->blh", w, jnp.ones_like(li))
+    # carried-state contribution
+    scale_inter = jnp.exp(m_inter - m_t)                          # [B,L,H]
+    h_inter = jnp.einsum("blhd,bhdv->blhv", q, state.c) * \
+        scale_inter[..., None] * (dk ** -0.5)
+    denom_inter = jnp.einsum("blhd,bhd->blh", q, state.n) * scale_inter * (dk ** -0.5)
+
+    denom = jnp.maximum(jnp.abs(denom_intra + denom_inter), jnp.exp(-m_t))
+    h_out = (h_intra + h_inter) / denom[..., None]
+
+    # state update to end of chunk
+    lf_tot = lf_cum[:, -1, :]                                     # [B,H]
+    m_state_intra = jnp.max(lf_tot[:, None, :] - lf_cum + li, axis=1)
+    m_new = jnp.maximum(state.m + lf_tot, m_state_intra)
+    w_state = jnp.exp(lf_tot[:, None, :] - lf_cum + li - m_new[:, None, :])
+    # pairwise contraction: a 3-operand einsum here materializes a
+    # [B,S,H,dk,dv]-sized intermediate (§Perf iteration 1)
+    kw = k * w_state[..., None]                                   # [B,S,H,dk]
+    c_new = (
+        state.c * jnp.exp(state.m + lf_tot - m_new)[..., None, None]
+        + jnp.einsum("bshd,bshv->bhdv", kw, v)
+    )
+    n_new = (
+        state.n * jnp.exp(state.m + lf_tot - m_new)[..., None]
+        + jnp.einsum("bsh,bshd->bhd", w_state, k)
+    )
+    return h_out, MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+def mlstm_forward(x, p, cfg, state: MLSTMState | None = None):
+    """Full-sequence mLSTM block.  x: [B,S,d]."""
+    b, s, d = x.shape
+    d_inner, heads, dh = mlstm_dims(cfg)
+    xi, gate = linear(x, p["up_x"]), linear(x, p["up_g"])
+    q = linear(xi, p["wq"]).reshape(b, s, heads, dh).astype(jnp.float32)
+    k = linear(xi, p["wk"]).reshape(b, s, heads, dh).astype(jnp.float32)
+    v = linear(xi, p["wv"]).reshape(b, s, heads, dh).astype(jnp.float32)
+    li = jax.nn.log_sigmoid(linear(xi, p["wi"]).astype(jnp.float32) + 4.0)
+    lf = jax.nn.log_sigmoid(linear(xi, p["wf"]).astype(jnp.float32) + 4.0)
+
+    ch = min(cfg.xlstm.chunk, s)
+    n_chunks = (s + ch - 1) // ch
+    pad = n_chunks * ch - s
+    if pad:
+        padfn = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v, li, lf = map(padfn, (q, k, v, li, lf))
+        # padded forget gates must not decay the state: set lf=0, li=-inf
+        valid = jnp.arange(n_chunks * ch) < s
+        li = jnp.where(valid[None, :, None], li, -1e30)
+        lf = jnp.where(valid[None, :, None], lf, 0.0)
+    rs = lambda t: t.reshape(b, n_chunks, ch, *t.shape[2:]).transpose(
+        1, 0, 2, *range(3, t.ndim + 1))
+    qc, kc, vc, lic, lfc = map(rs, (q, k, v, li, lf))
+
+    st = state if state is not None else MLSTMState(
+        c=jnp.zeros((b, heads, dh, dh), jnp.float32),
+        n=jnp.zeros((b, heads, dh), jnp.float32),
+        m=jnp.full((b, heads), -1e30, jnp.float32),
+    )
+    def step(carry, xs):
+        h, new = _mlstm_chunk(xs[0], xs[1], xs[2], xs[3], xs[4], carry)
+        return new, h
+    st_final, hs = jax.lax.scan(step, st, (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * ch, heads, dh)[:, :s]
+    h = groupnorm_heads(h.astype(x.dtype), p["gn"])
+    h = h.reshape(b, s, d_inner) * jax.nn.silu(gate)
+    return linear(h, p["down"]), st_final
+
+
+def mlstm_decode(x, p, cfg, state: MLSTMState):
+    """O(1) recurrent step.  x: [B,1,d]."""
+    b = x.shape[0]
+    d_inner, heads, dh = mlstm_dims(cfg)
+    xi, gate = linear(x, p["up_x"]), linear(x, p["up_g"])
+    q = linear(xi, p["wq"]).reshape(b, heads, dh).astype(jnp.float32)
+    k = linear(xi, p["wk"]).reshape(b, heads, dh).astype(jnp.float32)
+    v = linear(xi, p["wv"]).reshape(b, heads, dh).astype(jnp.float32)
+    li = jax.nn.log_sigmoid(linear(xi, p["wi"]).astype(jnp.float32) + 4.0)[:, 0]
+    lf = jax.nn.log_sigmoid(linear(xi, p["wf"]).astype(jnp.float32) + 4.0)[:, 0]
+
+    m_new = jnp.maximum(state.m + lf, li)                         # [B,H]
+    fs = jnp.exp(state.m + lf - m_new)[..., None]
+    is_ = jnp.exp(li - m_new)[..., None]
+    c_new = state.c * fs[..., None] + is_[..., None] * k[..., None] * v[:, :, None, :]
+    n_new = state.n * fs + is_ * k
+    qn = q * (dh ** -0.5)
+    num = jnp.einsum("bhd,bhdv->bhv", qn, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qn, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).astype(x.dtype)[:, None]                      # [B,1,H,dv]
+    h = groupnorm_heads(h, p["gn"]).reshape(b, 1, d_inner)
+    h = h * jax.nn.silu(gate)
+    return linear(h, p["down"]), MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm_block(rng, cfg, dtype):
+    d = cfg.d_model
+    heads = cfg.num_heads
+    dh = d // heads
+    r = jax.random.split(rng, 4)
+    ff = int(d * 4 / 3)
+    return {
+        "wx": init_linear(r[0], d, (4, heads, dh), dtype=dtype),   # i,f,z,o
+        "r": (jax.random.normal(r[1], (4, heads, dh, dh), jnp.float32)
+              * 0.02).astype(dtype),
+        "b": jnp.zeros((4, heads, dh), jnp.float32),
+        "gn": init_groupnorm(heads, dh, dtype),
+        "ff_up": init_linear(r[2], d, 2 * ff, dtype=dtype),
+        "ff_down": init_linear(r[3], ff, d, dtype=dtype),
+    }
+
+
+def _slstm_cell(gates_x, st: SLSTMState, r_w):
+    """gates_x: [B,4,H,dh] (from x); recurrence adds R h_{t-1}."""
+    rec = jnp.einsum("bhd,ghde->bghe", st.h, r_w)                 # [B,4,H,dh]
+    g = (gates_x + rec).astype(jnp.float32)
+    li = g[:, 0]                      # input gate (exp) pre-activation
+    lf = jax.nn.log_sigmoid(g[:, 1])  # forget gate (sigmoid, log domain)
+    z = jnp.tanh(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(lf + st.m, li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + st.m - m_new)
+    c_new = f_s * st.c + i_s * z
+    n_new = jnp.maximum(f_s * st.n + i_s, 1e-6)
+    h_new = o * (c_new / n_new)
+    return SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_forward(x, p, cfg, state: SLSTMState | None = None,
+                  time_chunk: int = 64):
+    """Sequence scan (sLSTM is inherently recurrent).  x: [B,S,d].
+
+    The scan runs over chunks of ``time_chunk`` steps with the inner steps
+    unrolled: per-iteration fixed overheads (xs slicing, gradient-buffer
+    updates) amortize 16x, and the f32 cast of the recurrent weights is
+    hoisted out of the loop (§Perf iteration 2)."""
+    b, s, d = x.shape
+    heads = cfg.num_heads
+    dh = d // heads
+    gates = linear(x, p["wx"]) + p["b"].astype(x.dtype)           # [B,S,4,H,dh]
+    st = state if state is not None else SLSTMState(
+        c=jnp.zeros((b, heads, dh), jnp.float32),
+        n=jnp.full((b, heads, dh), 1e-6, jnp.float32),
+        m=jnp.full((b, heads, dh), -1e30, jnp.float32),
+        h=jnp.zeros((b, heads, dh), jnp.float32),
+    )
+    r_w = p["r"].astype(jnp.float32)                              # hoisted cast
+    tc = min(time_chunk, s)
+    n_chunks = (s + tc - 1) // tc
+    pad = n_chunks * tc - s
+    gz = gates
+    if pad:
+        gz = jnp.pad(gates, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+    gz = gz.reshape(b, n_chunks, tc, 4, heads, dh).transpose(1, 2, 0, 3, 4, 5)
+    # materialize the time-major copy ONCE — without the barrier XLA sinks
+    # the transpose into the scan and re-touches the full gates tensor
+    # every iteration (§Perf iteration 3)
+    gz = jax.lax.optimization_barrier(gz)
+
+    def step(carry, gchunk):                                      # [tc,B,4,H,dh]
+        hs_c = []
+        for t in range(tc):
+            carry = _slstm_cell(gchunk[t], carry, r_w)
+            hs_c.append(carry.h)
+        return carry, jnp.stack(hs_c)
+
+    st_final, hs = jax.lax.scan(step, st, gz)                     # [n,tc,B,H,dh]
+    h = hs.reshape(n_chunks * tc, b, heads, dh)[:s].transpose(1, 0, 2, 3)
+    h = groupnorm_heads(h.astype(x.dtype), p["gn"]).reshape(b, s, d)
+    up = linear(h, p["ff_up"])
+    ff = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :ff]) * up[..., ff:]
+    return linear(y, p["ff_down"]), st_final
+
+
+def slstm_decode(x, p, cfg, state: SLSTMState):
+    y, st = slstm_forward(x, p, cfg, state)
+    return y, st

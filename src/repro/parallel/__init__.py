@@ -1,0 +1,4 @@
+"""Sharding rules and collective helpers for the production mesh."""
+from .sharding import (  # noqa: F401
+    AxisRules, ShardingCtx, logical, make_ctx, with_sharding,
+)

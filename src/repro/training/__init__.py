@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train step, data, checkpointing, fault
+tolerance.  Pure JAX (no optax/flax dependency)."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .train_step import TrainConfig, make_train_step, loss_fn  # noqa: F401

@@ -1,0 +1,48 @@
+"""Key hashing: jnp/numpy twins agree; collisions are rare; folds in range."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (
+    fold_hash, hash128_bytes_np, hash128_u32, hash128_u32_np, server_of_key,
+    server_of_key_np,
+)
+
+
+def test_u32_twins_agree():
+    ks = np.arange(0, 5000, 7, dtype=np.int32)
+    a = np.asarray(hash128_u32(jnp.asarray(ks)))
+    b = hash128_u32_np(ks)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_u32_matches_byte_pipeline():
+    for k in [0, 1, 255, 256, 123456, 2**31 - 1]:
+        via_bytes = hash128_bytes_np(int(np.uint32(k)).to_bytes(4, "little"))
+        via_u32 = hash128_u32_np(np.int32(k))
+        np.testing.assert_array_equal(via_bytes, via_u32)
+
+
+def test_no_collisions_in_large_sample():
+    ks = np.arange(200_000, dtype=np.int32)
+    h = hash128_u32_np(ks)
+    view = h.view([("", h.dtype)] * 4).ravel()
+    assert len(np.unique(view)) == len(ks)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 1 << 20), st.integers(0, 50))
+@settings(max_examples=50, deadline=None)
+def test_fold_hash_in_range(k, width, salt):
+    h = hash128_u32(jnp.asarray([k], jnp.int32))
+    f = int(fold_hash(h, width, salt)[0])
+    assert 0 <= f < width
+
+
+def test_server_partition_twins_and_balance():
+    ks = np.arange(100_000, dtype=np.int32)
+    a = np.asarray(server_of_key(jnp.asarray(ks), 32))
+    b = server_of_key_np(ks, 32)
+    np.testing.assert_array_equal(a, b)
+    counts = np.bincount(a, minlength=32)
+    assert counts.min() > 0.8 * counts.mean()
+    assert counts.max() < 1.2 * counts.mean()

@@ -1,0 +1,56 @@
+"""HLO static analyzer: exact on loop-free programs (vs XLA cost_analysis)
+and exact trip-count scaling on (nested) scans."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _scan_matmul(n):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=n)
+        return y
+    return f
+
+
+X = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+MM = 2 * 256 ** 3
+
+
+def test_loop_free_matches_xla():
+    def g(x, w):
+        return (x @ w) @ w
+    c = jax.jit(g).lower(X, W).compile()
+    a = analyze(c.as_text())
+    assert a.flops == c.cost_analysis().get("flops")
+
+
+def test_scan_trip_scaling():
+    for n in (2, 10, 37):
+        c = jax.jit(_scan_matmul(n)).lower(X, W).compile()
+        a = analyze(c.as_text())
+        assert abs(a.flops - MM * n) / (MM * n) < 1e-6, (n, a.flops)
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=7)
+        return y
+    c = jax.jit(g).lower(X, W).compile()
+    a = analyze(c.as_text())
+    assert abs(a.flops - MM * 35) / (MM * 35) < 1e-6
+
+
+def test_hbm_bytes_nonzero_and_scaled():
+    c1 = jax.jit(_scan_matmul(2)).lower(X, W).compile()
+    c2 = jax.jit(_scan_matmul(20)).lower(X, W).compile()
+    a1, a2 = analyze(c1.as_text()), analyze(c2.as_text())
+    assert a2.hbm_bytes > 5 * a1.hbm_bytes

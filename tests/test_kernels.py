@@ -1,0 +1,84 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import hash128_u32
+from repro.kernels.cms.ops import cms_update_query, rows_for
+from repro.kernels.cms.ref import cms_update_query_ref
+from repro.kernels.hot_gather.ops import hot_gather
+from repro.kernels.hot_gather.ref import hot_gather_ref
+from repro.kernels.orbit_match.ops import orbit_match
+from repro.kernels.orbit_match.ref import orbit_match_ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("b,c", [(8, 8), (64, 16), (300, 128), (1024, 512),
+                                 (17, 5)])
+def test_orbit_match_sweep(b, c):
+    keys = jnp.asarray(RNG.integers(0, 50, c), jnp.int32)
+    table = hash128_u32(keys)
+    occ = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+    val = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+    q = jnp.asarray(RNG.integers(0, 60, b), jnp.int32)
+    hq = hash128_u32(q)
+    for got, want in zip(orbit_match(hq, table, occ, val),
+                         orbit_match_ref(hq, table, occ, val)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(8, 64))
+@settings(max_examples=15, deadline=None)
+def test_orbit_match_property(b, c, universe):
+    c = min(c, universe)  # table keys must be distinct (controller invariant)
+    keys = jnp.asarray(RNG.choice(universe, c, replace=False), jnp.int32)
+    table = hash128_u32(keys)
+    occ = jnp.ones(c, jnp.int32)
+    val = jnp.ones(c, jnp.int32)
+    q = jnp.asarray(RNG.integers(0, universe, b), jnp.int32)
+    cidx, hit, vhit, pop = orbit_match(hash128_u32(q), table, occ, val)
+    # every reported hit indexes an entry whose key hash matches
+    cidx_np, hit_np = np.asarray(cidx), np.asarray(hit)
+    keys_np, q_np = np.asarray(keys), np.asarray(q)
+    for i in range(b):
+        if hit_np[i]:
+            assert keys_np[cidx_np[i]] == q_np[i]
+        else:
+            assert q_np[i] not in set(keys_np.tolist())
+    assert int(pop.sum()) == int(hit.sum())
+
+
+@pytest.mark.parametrize("b,w,block", [(64, 512, 64), (513, 2048, 256),
+                                       (100, 256, 32)])
+def test_cms_sweep(b, w, block):
+    hk = hash128_u32(jnp.asarray(RNG.integers(0, 1000, b), jnp.int32))
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    counts = jnp.asarray(RNG.integers(0, 5, (5, w)), jnp.int32)
+    nk, ek = cms_update_query(hk, mask, counts, block_b=block)
+    pad = (-b) % min(block, max(8, b))
+    idx = jnp.pad(rows_for(hk, w), ((0, pad), (0, 0)))
+    msk = jnp.pad(mask, (0, pad))
+    nr, er = cms_update_query_ref(idx, msk, counts, block_b=min(block, max(8, b)))
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er[:b]))
+
+
+@pytest.mark.parametrize("b,c,d,dt", [
+    (64, 32, 128, jnp.float32),
+    (500, 128, 300, jnp.bfloat16),
+    (8, 512, 64, jnp.float32),
+    (1024, 64, 1024, jnp.bfloat16),
+])
+def test_hot_gather_sweep(b, c, d, dt):
+    ids = jnp.asarray(RNG.integers(0, 4 * c, b), jnp.int32)
+    hot = jnp.asarray(np.sort(RNG.choice(4 * c, c, replace=False)), jnp.int32)
+    rows = jnp.asarray(RNG.normal(size=(c, d)), dt)
+    out, hit = hot_gather(ids, hot, rows)
+    want, hit_w = hot_gather_ref(ids, hot, rows)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(hit_w))

@@ -1,0 +1,94 @@
+"""Request-table invariants (paper §3.4): FIFO, isolation, overflow,
+wraparound — property-tested against a Python deque model."""
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import request_table as rt
+from repro.core.types import init_switch_state
+
+
+def fresh(c=4, s=4):
+    return init_switch_state(c, s, value_pad=8).reqtab
+
+
+def enq(table, cidxs, base_seq=0):
+    n = len(cidxs)
+    cid = jnp.asarray(cidxs, jnp.int32)
+    want = jnp.ones(n, bool)
+    return rt.enqueue(
+        table, cid, want,
+        client=jnp.arange(n, dtype=jnp.int32) + 100,
+        seq=jnp.arange(n, dtype=jnp.int32) + base_seq,
+        port=jnp.zeros(n, jnp.int32),
+        ts=jnp.zeros(n, jnp.float32),
+    )
+
+
+def test_fifo_order_single_key():
+    t = fresh()
+    res = enq(t, [1, 1, 1])
+    deq = rt.peek_front(res.table, jnp.full(4, 8, jnp.int32), 4)
+    assert deq.served[1].tolist() == [True, True, True, False]
+    assert deq.seq[1, :3].tolist() == [0, 1, 2]
+
+
+def test_isolation_between_keys():
+    t = fresh()
+    res = enq(t, [0, 1, 2, 0, 1, 0])
+    assert res.table.qlen.tolist() == [3, 2, 1, 0]
+    deq = rt.peek_front(res.table, jnp.full(4, 8, jnp.int32), 4)
+    assert deq.seq[0, :3].tolist() == [0, 3, 5]
+    assert deq.seq[1, :2].tolist() == [1, 4]
+    assert deq.seq[2, :1].tolist() == [2]
+
+
+def test_overflow_to_server():
+    t = fresh(c=2, s=2)
+    res = enq(t, [0, 0, 0, 0])
+    assert res.accepted.tolist() == [True, True, False, False]
+    assert res.overflow.tolist() == [False, False, True, True]
+    assert int(res.table.qlen[0]) == 2
+
+
+def test_wraparound():
+    t = fresh(c=1, s=4)
+    res = enq(t, [0, 0, 0])
+    t2 = rt.pop(res.table, jnp.asarray([2], jnp.int32))
+    assert int(t2.front[0]) == 2 and int(t2.qlen[0]) == 1
+    res2 = enq(t2, [0, 0, 0], base_seq=10)
+    # rear wrapped: 3 + 3 = 6 mod 4 = 2
+    assert int(res2.table.rear[0]) == 2
+    deq = rt.peek_front(res2.table, jnp.full(1, 8, jnp.int32), 4)
+    assert deq.seq[0].tolist() == [2, 10, 11, 12]
+
+
+@given(st.lists(st.tuples(st.sampled_from(["enq", "pop"]),
+                          st.integers(0, 2), st.integers(1, 3)),
+                min_size=1, max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_matches_deque_model(ops):
+    c, s = 3, 4
+    table = fresh(c, s)
+    model = [deque() for _ in range(c)]
+    seq = 0
+    for kind, key, count in ops:
+        if kind == "enq":
+            res = enq(table, [key] * count, base_seq=seq)
+            table = res.table
+            for i in range(count):
+                if len(model[key]) < s:
+                    model[key].append(seq + i)
+            seq += count
+        else:
+            npop = jnp.zeros(c, jnp.int32).at[key].set(count)
+            table = rt.pop(table, npop)
+            for _ in range(min(count, len(model[key]))):
+                model[key].popleft()
+        assert table.qlen.tolist() == [len(m) for m in model]
+    deq = rt.peek_front(table, jnp.full(c, s, jnp.int32), s)
+    for k in range(c):
+        got = deq.seq[k][deq.served[k]].tolist()
+        assert got == list(model[k])

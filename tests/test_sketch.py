@@ -1,0 +1,64 @@
+"""Count-min sketch + heavy hitters (paper §3.8)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import hash128_u32
+from repro.core.sketch import (
+    cms_query, cms_update, init_tracker, merge_candidates,
+    merge_candidates_hashed, report_and_reset, track, CountMinSketch,
+)
+
+
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_cms_never_underestimates(keys):
+    ks = jnp.asarray(keys, jnp.int32)
+    hk = hash128_u32(ks)
+    cms = CountMinSketch(jnp.zeros((5, 512), jnp.int32))
+    cms = cms_update(cms, hk, jnp.ones(len(keys), bool))
+    est = np.asarray(cms_query(cms, hk))
+    true = {k: keys.count(k) for k in set(keys)}
+    for i, k in enumerate(keys):
+        assert est[i] >= true[k]
+
+
+def _zipf_stream(n, n_keys, alpha=1.2, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_keys + 1) ** -alpha
+    p = ranks / ranks.sum()
+    return rng.choice(n_keys, size=n, p=p).astype(np.int32)
+
+
+def test_topk_recall_on_skewed_stream():
+    stream = _zipf_stream(4096, 2000)
+    tr = init_tracker(width=2048, k_cand=64)
+    for start in range(0, len(stream), 256):
+        batch = jnp.asarray(stream[start:start + 256])
+        tr = track(tr, batch, jnp.ones(len(batch), bool))
+    tr, top_k, top_e = report_and_reset(tr, 16)
+    true_top = set(np.argsort(-np.bincount(stream, minlength=2000))[:8].tolist())
+    got = set(np.asarray(top_k).tolist())
+    recall = len(true_top & got) / 8
+    assert recall >= 0.75, (recall, sorted(true_top), sorted(got))
+
+
+def test_exact_merge_keeps_best():
+    cand = init_tracker(8, 4).cand
+    cand = merge_candidates(
+        cand, jnp.asarray([5, 6, 7, 8, 9], jnp.int32),
+        jnp.asarray([10, 50, 20, 40, 30], jnp.int32), jnp.ones(5, bool))
+    kept = set(np.asarray(cand.kidx).tolist())
+    assert kept == {6, 8, 9, 7}
+
+
+def test_hashed_merge_recall_reasonable():
+    stream = _zipf_stream(2048, 500, seed=3)
+    counts = np.bincount(stream, minlength=500)
+    est = jnp.asarray(counts[stream], jnp.int32)  # oracle estimates
+    cand = init_tracker(8, 128).cand
+    cand = merge_candidates_hashed(
+        cand, jnp.asarray(stream), est, jnp.ones(len(stream), bool))
+    true_top = set(np.argsort(-counts)[:8].tolist())
+    got = set(np.asarray(cand.kidx).tolist())
+    assert len(true_top & got) >= 5

@@ -1,0 +1,156 @@
+"""Switch dataplane semantics (paper §3.3 Fig. 4) + coherence (§3.7).
+
+Byte-level checks: orbit lines carry real value bytes; coherence is
+verified by CONTENT (a stale read would return old bytes), not just flags.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    OP_F_REP, OP_R_REQ, OP_W_REP, OP_W_REQ, ROUTE_CLIENT, ROUTE_DROP,
+    ROUTE_SERVER, CacheController, ControllerConfig, empty_batch,
+    init_switch_state, switch_step,
+)
+from repro.core.hashing import hash128_u32
+from repro.kvstore.store import synth_value
+
+PAD = 64
+
+
+def make_pk(ops, kidxs, flags=None, vals=None, vlens=None, seqs=None):
+    n = len(ops)
+    pk = empty_batch(max(n, 8), value_pad=PAD)
+    k = jnp.asarray(kidxs, jnp.int32)
+    upd = dict(
+        op=pk.op.at[:n].set(jnp.asarray(ops, jnp.int32)),
+        kidx=pk.kidx.at[:n].set(k),
+        hkey=pk.hkey.at[:n].set(hash128_u32(k)),
+        client=pk.client.at[:n].set(jnp.arange(n)),
+        seq=pk.seq.at[:n].set(jnp.asarray(seqs, jnp.int32) if seqs else jnp.arange(n)),
+        valid=pk.valid.at[:n].set(True),
+    )
+    if flags is not None:
+        upd["flag"] = pk.flag.at[:n].set(jnp.asarray(flags, jnp.int32))
+    if vals is not None:
+        upd["val"] = pk.val.at[:n].set(jnp.asarray(vals, jnp.uint8))
+    if vlens is not None:
+        upd["vlen"] = pk.vlen.at[:n].set(jnp.asarray(vlens, jnp.int32))
+    return pk._replace(**upd)
+
+
+def boot(keys=(0, 1, 2, 3), entries=8):
+    sw = init_switch_state(entries, queue_size=4, value_pad=PAD)
+    ctrl = CacheController(ControllerConfig(active_size=entries))
+    sw, fetches = ctrl.preload(sw, np.asarray(keys, np.int32))
+    ks = jnp.asarray([k for k, _ in fetches], jnp.int32)
+    vals = synth_value(ks, jnp.zeros_like(ks), PAD)
+    pk = make_pk([OP_F_REP] * len(fetches), [k for k, _ in fetches],
+                 flags=[1] * len(fetches), vals=np.asarray(vals),
+                 vlens=[32] * len(fetches), seqs=[0] * len(fetches))
+    sw, _ = switch_step(sw, pk, jnp.int32(100), 4)
+    return sw, ctrl
+
+
+def test_hit_enqueues_and_orbit_serves_with_bytes():
+    sw, _ = boot()
+    pk = make_pk([OP_R_REQ] * 3, [0, 0, 1])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.stats.n_hit) == 3
+    assert int(out.stats.n_served) == 3
+    assert out.route[:3].tolist() == [ROUTE_DROP] * 3
+    # value bytes served == store bytes
+    expect = np.asarray(synth_value(jnp.asarray([0]), jnp.asarray([0]), PAD))[0]
+    got = np.asarray(sw.orbit.val[0])
+    np.testing.assert_array_equal(got, expect)
+    # grid kidx matches the requested key (no collision)
+    assert int(out.grid.kidx[0]) == 0
+
+
+def test_miss_routes_to_server():
+    sw, _ = boot()
+    pk = make_pk([OP_R_REQ], [77])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.route[0]) == ROUTE_SERVER
+    assert int(out.stats.n_hit) == 0
+
+
+def test_write_invalidates_and_reply_revalidates_with_new_bytes():
+    sw, _ = boot()
+    # write request for cached key 2 -> invalidate + FLAG=1 + to server
+    pk = make_pk([OP_W_REQ], [2])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.flag[0]) == 1 and int(out.route[0]) == ROUTE_SERVER
+    cidx = 2  # preload order: keys 0..3 -> entries 0..3
+    assert not bool(sw.state.valid[cidx])
+    assert not bool(sw.orbit.live[cidx])  # stale line dropped
+
+    # reads while invalid -> forwarded to server (no stale serve)
+    pk = make_pk([OP_R_REQ], [2])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.route[0]) == ROUTE_SERVER
+    assert int(out.stats.n_served) == 0
+
+    # write reply carries the new value (version 1): validate + install
+    newv = synth_value(jnp.asarray([2]), jnp.asarray([1]), PAD)
+    pk = make_pk([OP_W_REP], [2], flags=[1], vals=np.asarray(newv), vlens=[32])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.route[0]) == ROUTE_CLIENT  # clone: client still replied
+    assert bool(sw.state.valid[cidx]) and bool(sw.orbit.live[cidx])
+    np.testing.assert_array_equal(np.asarray(sw.orbit.val[cidx]), np.asarray(newv)[0])
+
+    # subsequent read is served from orbit with NEW bytes
+    pk = make_pk([OP_R_REQ], [2])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.stats.n_served) == 1
+
+
+def test_one_line_serves_many_requests_cloning():
+    """PRE cloning (§3.5): one fetched line answers a burst of requests."""
+    sw, _ = boot()
+    pk = make_pk([OP_R_REQ] * 4, [3, 3, 3, 3])
+    sw, out = switch_step(sw, pk, jnp.int32(100), 4)
+    assert int(out.stats.n_served) == 4
+    assert bool(sw.orbit.live[3])  # line still circulating
+
+
+def test_recirculation_budget_limits_serving():
+    """Fig. 16 mechanism: too little recirculation budget -> queue waits."""
+    sw, _ = boot()
+    pk = make_pk([OP_R_REQ] * 4, [0, 0, 0, 0])
+    # budget 1 packet for the whole orbit: only 1 pass for entry 0 (4 lines
+    # live -> per-line budget 0 ... 1): give 4 => 1 pass each
+    sw, out = switch_step(sw, pk, jnp.int32(4), 4)
+    assert int(out.stats.n_served) == 1
+    assert int(sw.reqtab.qlen[0]) == 3
+    # next window, more budget drains the queue
+    sw, out = switch_step(sw, empty_batch(8, PAD), jnp.int32(100), 4)
+    assert int(out.stats.n_served) == 3
+
+
+def test_eviction_inherits_cacheidx_and_collision_resolution_path():
+    """§3.8: new key inherits the evicted key's CacheIdx; queued requests
+    for the old key get served the NEW key's packet -> client detects the
+    kidx mismatch (tested at client level in test_simulator)."""
+    sw, ctrl = boot()
+    # keys 1..3 are hot (served normally); key 0 is coldest but has one
+    # request QUEUED (no budget to serve it this window)
+    pk = make_pk([OP_R_REQ] * 6, [1, 2, 3, 1, 2, 3])
+    sw, _ = switch_step(sw, pk, jnp.int32(100), 4)
+    pk = make_pk([OP_R_REQ], [0])
+    sw, _ = switch_step(sw, pk, jnp.int32(0), 4)
+    assert int(sw.reqtab.qlen[0]) == 1
+    # controller replaces key 0 (popularity 1) with hot key 50
+    reports = [(np.asarray([50]), np.asarray([1000]))]
+    ctrl.active_size = 4
+    sw2, info = ctrl.update(sw, reports)
+    assert 0 in info.evicted.tolist() and 50 in info.inserted.tolist()
+    (k50, c50) = [f for f in info.fetches if f[0] == 50][0]
+    assert c50 == 0  # inherited CacheIdx of the evicted key
+    # F-REP installs the new line; it serves the stale queued request
+    v = synth_value(jnp.asarray([50]), jnp.asarray([0]), PAD)
+    pk = make_pk([OP_F_REP], [50], flags=[1], vals=np.asarray(v), vlens=[32])
+    sw2, out = switch_step(sw2, pk, jnp.int32(100), 4)
+    assert int(out.stats.n_served) == 1
+    assert int(out.grid.kidx[0]) == 50  # wrong key for the old request ->
+    # the client compares 50 != 0 and issues CRN-REQ (client-side test)
