@@ -20,6 +20,7 @@ from dataclasses import replace
 
 import numpy as np
 
+from repro.kvstore.fleet import BatchedRackSimulator
 from repro.kvstore.simulator import RackConfig, RackSimulator
 from repro.kvstore.workload import Workload, WorkloadConfig
 
@@ -42,6 +43,76 @@ def make_sim(scheme: str, wl: Workload, cache_entries: int = 128,
     return sim
 
 
+def make_batched_sim(scheme: str, workloads, cache_entries: int = 128,
+                     preload: bool = True, offered=None, seeds=None,
+                     n_points: int | None = None,
+                     **cfg_kw) -> BatchedRackSimulator:
+    """One fleet of identically-shaped racks (one per sweep point)."""
+    cfg = RackConfig(scheme=scheme, cache_entries=cache_entries,
+                     recirc_gbps=RECIRC_GBPS, **cfg_kw)
+    bsim = BatchedRackSimulator(cfg, workloads, offered_rps=offered,
+                                seeds=seeds, n_points=n_points)
+    if preload:
+        bsim.preload()
+    return bsim
+
+
+def _row(res, burn_frac=0.3):
+    rx = res.throughput_rps(burn_frac=burn_frac)
+    tx = res.offered_rps(burn_frac=burn_frac)
+    return dict(
+        offered=tx, rx=rx, loss=1.0 - rx / max(tx, 1.0),
+        srv_drop=res.max_server_drop_frac(burn_frac=burn_frac),
+        p50=res.latency_percentile(0.5),
+        p99=res.latency_percentile(0.99),
+        baleff=res.balancing_efficiency(burn_frac=burn_frac),
+        overflow_ratio=res.overflow_ratio(burn_frac=burn_frac),
+        switch_p99=res.latency_percentile(0.99, "switch"),
+    )
+
+
+def _knee_of(rows, loss_tol, srv_drop_tol):
+    ok = [r["rx"] for r in rows
+          if r["loss"] <= loss_tol and r["srv_drop"] <= srv_drop_tol]
+    return max(ok) if ok else rows[0]["rx"]
+
+
+def knee_throughput_batched(bsim: BatchedRackSimulator, loads=DEFAULT_LOADS,
+                            seconds: float = 0.03, loss_tol: float = 0.02,
+                            srv_drop_tol: float = 0.05):
+    """Ascending staircase over a fleet: every point climbs the load ladder
+    simultaneously (same methodology as ``knee_throughput``, one batched
+    run per rung instead of one serial run per point per rung).
+
+    Returns one ``(knee_rps, rows)`` per sweep point.
+    """
+    per_point_rows = [[] for _ in range(bsim.n_points)]
+    for rps in loads:
+        bsim.set_offered(rps)
+        bsim.reset_stats()
+        for i, res in enumerate(bsim.run(seconds)):
+            per_point_rows[i].append(_row(res))
+    return [(_knee_of(rows, loss_tol, srv_drop_tol), rows)
+            for rows in per_point_rows]
+
+
+def knee_throughput_parallel(scheme: str, wl: Workload, loads=DEFAULT_LOADS,
+                             seconds: float = 0.03, loss_tol: float = 0.02,
+                             srv_drop_tol: float = 0.05,
+                             cache_entries: int = 128, **cfg_kw):
+    """Whole knee search as ONE batched run: each load rung is its own
+    sweep point (preloaded warm, independently seeded), so the full
+    latency-throughput curve comes out of a single vmapped scan.
+
+    Returns ``(knee_rps, rows)`` like ``knee_throughput``.
+    """
+    bsim = make_batched_sim(scheme, wl, cache_entries=cache_entries,
+                            offered=loads, seeds=range(len(loads)), **cfg_kw)
+    bsim.reset_stats()
+    rows = [_row(res) for res in bsim.run(seconds)]
+    return _knee_of(rows, loss_tol, srv_drop_tol), rows
+
+
 def knee_throughput(sim: RackSimulator, loads=DEFAULT_LOADS,
                     seconds: float = 0.03, loss_tol: float = 0.02,
                     srv_drop_tol: float = 0.05):
@@ -54,24 +125,11 @@ def knee_throughput(sim: RackSimulator, loads=DEFAULT_LOADS,
     and it barely moves *total* loss (it owns only a few % of traffic)
     while its latency/drops explode — the paper's Fig. 11 knee."""
     rows = []
-    best_ok = None
-    best_any = 0.0
     for rps in loads:
         sim.set_offered(rps)
         sim.reset_stats()
-        res = sim.run(seconds)
-        rx = res.throughput_rps(burn_frac=0.3)
-        tx = res.offered_rps(burn_frac=0.3)
-        loss = 1.0 - rx / max(tx, 1.0)
-        sdrop = res.max_server_drop_frac(burn_frac=0.3)
-        rows.append(dict(offered=tx, rx=rx, loss=loss, srv_drop=sdrop,
-                         p50=res.latency_percentile(0.5),
-                         p99=res.latency_percentile(0.99),
-                         baleff=res.balancing_efficiency(burn_frac=0.3)))
-        best_any = max(best_any, rx)
-        if loss <= loss_tol and sdrop <= srv_drop_tol:
-            best_ok = max(best_ok or 0.0, rx)
-    return (best_ok if best_ok is not None else rows[0]["rx"]), rows
+        rows.append(_row(sim.run(seconds)))
+    return _knee_of(rows, loss_tol, srv_drop_tol), rows
 
 
 def workload(alpha=0.99, write_ratio=0.0, value_sizes=((64, 0.82), (1024, 0.18)),

@@ -11,7 +11,9 @@ from repro.kvstore.simulator import RackConfig, RackSimulator
 from repro.kvstore.workload import Workload, WorkloadConfig, production_workload
 
 from .common import (DEFAULT_LOADS, NUM_KEYS, RECIRC_GBPS, emit,
-                     knee_throughput, make_sim, workload)
+                     knee_throughput, knee_throughput_batched,
+                     knee_throughput_parallel, make_batched_sim, make_sim,
+                     workload)
 
 SCHEMES = ("nocache", "netcache", "orbitcache")
 
@@ -19,14 +21,14 @@ SCHEMES = ("nocache", "netcache", "orbitcache")
 # ---------------------------------------------------------------------------
 def fig09_skew(quick=False):
     """Throughput vs skewness (paper: OrbitCache 3.59x NoCache, 1.95x
-    NetCache at zipf-0.99)."""
+    NetCache at zipf-0.99).  The skew sweep is one fleet per scheme: every
+    zipf point climbs the load staircase in lockstep."""
     alphas = (0.9, 0.95, 0.99) if quick else (0.8, 0.9, 0.95, 0.99, 1.2)
+    wls = [workload(alpha=a) for a in alphas]
     out = {}
-    for a in alphas:
-        wl = workload(alpha=a)
-        for scheme in SCHEMES:
-            sim = make_sim(scheme, wl)
-            knee, _ = knee_throughput(sim)
+    for scheme in SCHEMES:
+        bsim = make_batched_sim(scheme, wls)
+        for a, (knee, _) in zip(alphas, knee_throughput_batched(bsim)):
             out[(scheme, a)] = knee
             emit(f"fig09/{scheme}/zipf-{a}", f"{knee/1e6:.2f}", "Mrps_knee")
     for a in alphas:
@@ -91,14 +93,19 @@ def fig12_write_ratio(quick=False):
 
 
 def fig13_scalability(quick=False):
-    """Linear scaling with server count (50K RPS rate limit, paper §5.2)."""
+    """Linear scaling with server count (50K RPS rate limit, paper §5.2).
+
+    Server count changes array shapes (static), so each count compiles its
+    own fleet — but within a count the whole load ladder runs as one
+    batched knee search."""
     counts = (16, 32) if quick else (16, 32, 64)
     out = {}
+    wl = workload()
     for n in counts:
-        wl = workload()
         for scheme in SCHEMES:
-            sim = make_sim(scheme, wl, num_servers=n, server_rps=50_000.0)
-            knee, rows = knee_throughput(sim, loads=(0.5e6, 1e6, 2e6, 3e6, 4e6))
+            knee, rows = knee_throughput_parallel(
+                scheme, wl, loads=(0.5e6, 1e6, 2e6, 3e6, 4e6),
+                num_servers=n, server_rps=50_000.0)
             be = rows[-1]["baleff"]
             out[(scheme, n)] = (knee, be)
             emit(f"fig13/{scheme}/servers-{n}", f"{knee/1e6:.2f}",
@@ -143,17 +150,21 @@ def fig15_breakdown(quick=False):
 
 
 def fig16_cache_size(quick=False):
-    """Cache-size sweep: saturation ~128 entries, overflow soars >=256."""
+    """Cache-size sweep: saturation ~128 entries, overflow soars >=256.
+
+    Cache size is static (table shapes), so each size compiles its own
+    fleet; the load ladder per size is one batched knee search, and the
+    knee rung's own measurements supply overflow/latency."""
     sizes = (64, 128, 256) if quick else (16, 32, 64, 128, 256, 512)
     wl = workload()
     out = {}
     for c in sizes:
-        sim = make_sim("orbitcache", wl, cache_entries=c)
-        knee, rows = knee_throughput(sim)
-        sim.set_offered(knee)
-        res = sim.run(0.02)
-        ovf = res.overflow_ratio()
-        p99 = res.latency_percentile(0.99, "switch")
+        knee, rows = knee_throughput_parallel("orbitcache", wl,
+                                              cache_entries=c)
+        knee_row = max((r for r in rows if r["rx"] <= knee),
+                       key=lambda r: r["rx"], default=rows[0])
+        ovf = knee_row["overflow_ratio"]
+        p99 = knee_row["switch_p99"]
         out[c] = (knee, ovf, p99)
         emit(f"fig16/entries-{c}", f"{knee/1e6:.2f}",
              f"Mrps_knee,overflow={ovf:.3f},switch_p99us={p99:.1f}")

@@ -1,0 +1,149 @@
+"""Perf smoke: simulated windows/sec and requests/sec, serial vs batched.
+
+A small rack runs the same total work two ways:
+
+  serial     N independent RackSimulator sweeps, one after another
+             (they share one compiled chunk — seeds are host-side);
+  batched    one N-point BatchedRackSimulator fleet (vmapped scan).
+
+Both paths are warmed first (compile excluded from the timed region,
+reported separately).  Because shared CI/container hosts drift on ~10 s
+timescales, the two paths are measured in interleaved pairs and the
+headline speedup is the **median of per-pair ratios** — each pair is
+adjacent in time, so slow host drift cancels.  Results land in
+``BENCH_simulator.json`` at the repo root so later PRs have a perf
+trajectory to regress against.
+
+Run: ``PYTHONPATH=src python -m benchmarks.perf_smoke``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import platform
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import kernels  # noqa: E402
+from repro.kvstore.fleet import BatchedRackSimulator  # noqa: E402
+from repro.kvstore.simulator import RackConfig, RackSimulator  # noqa: E402
+from repro.kvstore.workload import Workload, WorkloadConfig  # noqa: E402
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# A deliberately small rack: state fits in cache, so the benchmark measures
+# the simulator machinery (per-window op overhead and how well it batches),
+# not DRAM streaming of value payloads.
+SMOKE_CFG = RackConfig(
+    scheme="orbitcache", cache_entries=32, num_servers=4,
+    client_batch=128, fetch_lanes=32, value_pad=64, server_queue=32,
+    subrounds=2,
+)
+SMOKE_KEYS = 10_000
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--points", type=int, default=16,
+                    help="sweep points (serial runs and fleet width)")
+    ap.add_argument("--windows", type=int, default=256,
+                    help="measured windows per point per rep")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="interleaved (serial, batched) measurement pairs")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_simulator.json"))
+    args = ap.parse_args()
+    if args.points < 1 or args.windows < 1 or args.reps < 1:
+        ap.error("--points, --windows and --reps must be >= 1")
+
+    wl = Workload(WorkloadConfig(num_keys=SMOKE_KEYS, offered_rps=1.0e6))
+    n, w = args.points, args.windows
+    print(f"# perf_smoke: {n} points x {w} windows x {args.reps} pairs, "
+          f"backend={jax.default_backend()}, "
+          f"kernels={kernels.kernel_backend()}", flush=True)
+
+    t0 = time.time()
+    sims = []
+    for i in range(n):
+        sim = RackSimulator(dataclasses.replace(SMOKE_CFG, seed=i), wl)
+        sim.preload(wl.hottest_keys(SMOKE_CFG.cache_entries))
+        sims.append(sim)
+    sims[0].run_windows(w)  # compile the measured chunk length
+    serial_setup_s = time.time() - t0
+
+    t0 = time.time()
+    bsim = BatchedRackSimulator(SMOKE_CFG, wl, n_points=n)
+    bsim.preload()
+    bsim.run_windows(w)
+    batched_setup_s = time.time() - t0
+
+    serial_t, batched_t, ratios = [], [], []
+    serial_tx = batched_tx = 0
+    for rep in range(args.reps):
+        t0 = time.time()
+        for sim in sims:
+            serial_tx += int(np.sum(sim.run_windows(w)["tx"]))
+        ts = time.time() - t0
+        t0 = time.time()
+        batched_tx += int(np.sum(bsim.run_windows(w)["tx"]))
+        tb = time.time() - t0
+        serial_t.append(ts)
+        batched_t.append(tb)
+        ratios.append(ts / tb)
+        print(f"pair {rep}: serial {n*w/ts:.0f} w/s, batched {n*w/tb:.0f} "
+              f"w/s, ratio {ts/tb:.2f}", flush=True)
+
+    speedup = statistics.median(ratios)
+    serial_best = n * w / min(serial_t)
+    batched_best = n * w / min(batched_t)
+    print(f"serial,{serial_best:.0f},windows_per_s "
+          f"({serial_tx/sum(serial_t)/1e6:.2f}M req/s)", flush=True)
+    print(f"batched,{batched_best:.0f},windows_per_s "
+          f"({batched_tx/sum(batched_t)/1e6:.2f}M req/s)", flush=True)
+    print(f"speedup,{speedup:.2f},median of per-pair ratios", flush=True)
+
+    result = {
+        "bench": "rack_simulator_smoke",
+        "config": {
+            "points": n, "windows": w, "reps": args.reps,
+            "num_keys": SMOKE_KEYS,
+            "rack": dataclasses.asdict(SMOKE_CFG),
+        },
+        "env": {
+            "jax_backend": jax.default_backend(),
+            "kernel_backend": kernels.kernel_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "cpus": os.cpu_count(),
+        },
+        "serial": {
+            "windows_per_s_best": serial_best,
+            "requests_per_s": serial_tx / sum(serial_t),
+            "elapsed_s": serial_t,
+            "setup_and_compile_s": serial_setup_s,
+        },
+        "batched": {
+            "windows_per_s_best": batched_best,
+            "requests_per_s": batched_tx / sum(batched_t),
+            "elapsed_s": batched_t,
+            "setup_and_compile_s": batched_setup_s,
+        },
+        "pair_ratios": ratios,
+        "speedup_windows_per_s": speedup,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {args.out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

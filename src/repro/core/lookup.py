@@ -3,9 +3,12 @@
 The hardware realizes this as a match-action table; here it is a vectorized
 exact-match over the ``C`` installed entries.  ``C`` is small (the paper's
 effective cache size is 32–512 — small cache effect), so an associative
-compare is both faithful and cheap; the Pallas kernel
-``repro.kernels.orbit_serve`` fuses this match with request-table access for
-the TPU hot path.
+compare is both faithful and cheap.  The dataplane hot path
+(``repro.core.switch``) routes this match through the
+``repro.kernels.orbit_match`` dispatcher, which fuses the match with the
+validity filter and popularity accumulation (Pallas kernel on TPU, jnp
+oracle elsewhere); ``lookup`` below is the standalone reference used by the
+controller and tests.
 """
 from __future__ import annotations
 

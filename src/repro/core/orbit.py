@@ -19,6 +19,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from . import request_table as rt
+from .scatter_free import last_writer
 from .types import OrbitBuffer, SwitchState
 
 
@@ -31,6 +32,7 @@ class ServeGrid(NamedTuple):
     port: jnp.ndarray     # int32[C, J]
     ts: jnp.ndarray       # float32[C, J] request submit time
     order: jnp.ndarray    # int32[C, J] serve order within window (latency model)
+    req_kidx: jnp.ndarray # int32[C, J] key each request asked for (client check)
     kidx: jnp.ndarray     # int32[C]  key carried by the serving line (frag 0)
     vlen: jnp.ndarray     # int32[C]  total value bytes for the entry
     version: jnp.ndarray  # int32[C]
@@ -94,6 +96,7 @@ def orbit_pass(sw: SwitchState, recirc_packets: jnp.ndarray, max_serves: int,
         ts=deq.ts,
         order=jnp.broadcast_to(jnp.arange(max_serves, dtype=jnp.int32)[None, :],
                                deq.served.shape),
+        req_kidx=deq.kidx,
         kidx=orbit.kidx[first],
         vlen=vlen_total,
         version=orbit.version[first],
@@ -125,15 +128,20 @@ def install_lines(
     if n_frags is None:
         n_frags = jnp.ones_like(cidx)
     line = cidx * f + jnp.clip(frag, 0, f - 1)
-    idx = jnp.where(mask, line, c * f)  # drop non-installs
-    ent_idx = jnp.where(mask & (frag == 0), cidx, c)
+    # Scatter-free install: per orbit line, the LAST packet installing it
+    # this batch wins (scatter updates apply in lane order) and its fields
+    # are gathered in.
+    writer, written = last_writer(line, mask, c * f)            # [C*F]
+    ent_writer, ent_written = last_writer(cidx, mask & (frag == 0), c)  # [C]
+    pick = lambda arr, src: jnp.where(written, src[writer], arr)
     return OrbitBuffer(
-        live=orbit.live.at[idx].set(True, mode='drop'),
-        kidx=orbit.kidx.at[idx].set(kidx, mode='drop'),
-        version=orbit.version.at[idx].set(version, mode='drop'),
-        vlen=orbit.vlen.at[idx].set(vlen, mode='drop'),
-        val=orbit.val.at[idx].set(val, mode='drop'),
-        frags=orbit.frags.at[ent_idx].set(jnp.maximum(n_frags, 1), mode='drop'),
+        live=orbit.live | written,
+        kidx=pick(orbit.kidx, kidx),
+        version=pick(orbit.version, version),
+        vlen=pick(orbit.vlen, vlen),
+        val=jnp.where(written[:, None], val[writer], orbit.val),
+        frags=jnp.where(ent_written, jnp.maximum(n_frags, 1)[ent_writer],
+                        orbit.frags),
     )
 
 

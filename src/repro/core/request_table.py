@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+from .scatter_free import unique_writer
 from .types import RequestTable
 
 
@@ -34,6 +35,7 @@ def enqueue(
     seq: jnp.ndarray,       # int32[B]
     port: jnp.ndarray,      # int32[B]
     ts: jnp.ndarray,        # float32[B]
+    kidx: jnp.ndarray | None = None,  # int32[B] requested key (optional)
 ) -> EnqueueResult:
     """Vectorized multi-enqueue of one packet batch."""
     c_entries = table.num_entries
@@ -53,13 +55,12 @@ def enqueue(
 
     slot = (table.rear[safe_cidx] + offset) % s
     flat = safe_cidx * s + slot
-    # Scatter metadata for accepted packets only.  Rejected packets are
-    # routed to an out-of-range index and dropped by the scatter — a
-    # rejected packet's wrapped slot could otherwise collide with an
-    # accepted packet's slot and clobber it nondeterministically.
-    flat_w = jnp.where(accepted, flat, c_entries * s)
+    # Store metadata for accepted packets only, scatter-free: accepted
+    # packets hit *distinct* slots (per-key offsets are consecutive), so a
+    # slot's writer is unique.
+    writer, written = unique_writer(flat, accepted, c_entries * s)
     def put(arr, val):
-        return arr.at[flat_w].set(val, mode='drop')
+        return jnp.where(written, val[writer], arr)
 
     new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
     table2 = RequestTable(
@@ -68,6 +69,7 @@ def enqueue(
         port=put(table.port, port),
         ts=put(table.ts, ts),
         acked=put(table.acked, jnp.zeros_like(seq)),
+        kidx=table.kidx if kidx is None else put(table.kidx, kidx),
         qlen=table.qlen + new_counts,
         front=table.front,
         rear=(table.rear + new_counts) % s,
@@ -83,6 +85,7 @@ class DequeueResult(NamedTuple):
     seq: jnp.ndarray      # int32[C, J]
     port: jnp.ndarray     # int32[C, J]
     ts: jnp.ndarray       # float32[C, J]
+    kidx: jnp.ndarray     # int32[C, J] requested key of each queued request
 
 
 def peek_front(table: RequestTable, budget: jnp.ndarray, max_serves: int,
@@ -107,6 +110,7 @@ def peek_front(table: RequestTable, budget: jnp.ndarray, max_serves: int,
         seq=table.seq[flat],
         port=table.port[flat],
         ts=table.ts[flat],
+        kidx=table.kidx[flat],
     )
 
 

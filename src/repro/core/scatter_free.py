@@ -1,0 +1,40 @@
+"""Scatter-free update primitives (one-hot reduce + winner gather).
+
+Per-lane scatters serialize on CPU and have no MXU analogue; every
+dataplane register write is instead expressed as: build the bool[B, N]
+membership matrix of lanes targeting each destination, reduce it to a
+single *writer* lane per destination, and gather that lane's payload.
+
+Two reductions cover all call sites:
+
+* :func:`unique_writer` — destinations are provably distinct among masked
+  lanes (request-table slots, server FIFO cells, CRN buffer slots), so
+  any reduction finds *the* writer.
+* :func:`last_writer` — duplicates are possible and scatter semantics
+  apply updates in lane order, so the last masked lane wins (orbit-line
+  installs).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unique_writer(dest: jnp.ndarray, mask: jnp.ndarray, size: int,
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(writer int32[size], written bool[size]) for distinct destinations.
+
+    ``dest`` int32[B] target index per lane (values >= size are dropped);
+    ``mask`` bool[B] which lanes write.  Each masked lane must target a
+    distinct destination, so first == last == only writer.
+    """
+    hit = mask[:, None] & (dest[:, None] == jnp.arange(size)[None, :])
+    return jnp.argmax(hit, axis=0), jnp.any(hit, axis=0)
+
+
+def last_writer(dest: jnp.ndarray, mask: jnp.ndarray, size: int,
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(writer int32[size], written bool[size]); the LAST masked lane
+    targeting a destination wins — the order scatter updates apply in."""
+    lanes = jnp.arange(dest.shape[0], dtype=jnp.int32)[:, None]
+    hit = mask[:, None] & (dest[:, None] == jnp.arange(size)[None, :])
+    return jnp.argmax(jnp.where(hit, lanes, -1), axis=0), jnp.any(hit, axis=0)

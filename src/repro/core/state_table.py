@@ -14,21 +14,24 @@ import jax.numpy as jnp
 from .types import StateTable
 
 
+def _onehot(cidx: jnp.ndarray, mask: jnp.ndarray, c: int) -> jnp.ndarray:
+    """bool[B, C] membership matrix (scatter-free update form)."""
+    return mask[:, None] & (cidx[:, None] == jnp.arange(c)[None, :])
+
+
 def invalidate(st: StateTable, cidx: jnp.ndarray, mask: jnp.ndarray) -> StateTable:
     """Invalidate entries hit by write requests (vectorized; mask bool[B])."""
-    c = st.valid.shape[0]
-    idx = jnp.where(mask, cidx, c)  # out-of-range -> dropped
+    oh = _onehot(cidx, mask, st.valid.shape[0])
     # version bump must count multiplicity (two writes in one batch = +2) so
     # in-flight lines fetched between them are both stale.
-    bump = jnp.zeros_like(st.version).at[idx].add(1, mode='drop')
+    bump = jnp.sum(oh.astype(jnp.int32), axis=0)
     return StateTable(
-        valid=st.valid.at[idx].set(False, mode='drop'),
+        valid=st.valid & ~jnp.any(oh, axis=0),
         version=st.version + bump,
     )
 
 
 def validate(st: StateTable, cidx: jnp.ndarray, mask: jnp.ndarray) -> StateTable:
     """Re-validate entries on write/fetch replies carrying fresh values."""
-    c = st.valid.shape[0]
-    idx = jnp.where(mask, cidx, c)
-    return st._replace(valid=st.valid.at[idx].set(True, mode='drop'))
+    oh = _onehot(cidx, mask, st.valid.shape[0])
+    return st._replace(valid=st.valid | jnp.any(oh, axis=0))

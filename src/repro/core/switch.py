@@ -25,7 +25,8 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from . import lookup as lk
+from repro import kernels as kn
+
 from . import orbit as ob
 from . import request_table as rt
 from . import state_table as stt
@@ -75,9 +76,6 @@ def switch_step(
 ) -> tuple[SwitchState, StepOutput]:
     """Process one ingress batch + one orbit serving round."""
     op, valid = pkts.op, pkts.valid
-    cidx = lk.lookup(sw.lookup, pkts.hkey)
-    hit = (cidx >= 0) & valid
-    safe_cidx = jnp.where(hit, cidx, 0)
 
     r_req = valid & (op == OP_R_REQ)
     w_req = valid & (op == OP_W_REQ)
@@ -87,19 +85,30 @@ def switch_step(
     f_req = valid & (op == OP_F_REQ)
     crn = valid & (op == OP_CRN_REQ)
 
+    # Fused match-action lookup (kernel dispatch: Pallas on TPU, jnp oracle
+    # elsewhere): 128-bit exact-match + validity filter + per-entry
+    # popularity accumulation over valid R-REQ lanes, one pass.
+    cidx, khit, kvhit, pop_delta = kn.orbit_match(
+        pkts.hkey, sw.lookup.hkeys,
+        sw.lookup.occupied.astype(jnp.int32),
+        sw.state.valid.astype(jnp.int32),
+        pop_mask=r_req.astype(jnp.int32),
+    )
+    hit = (khit > 0) & valid
+    safe_cidx = jnp.where(hit, cidx, 0)
+
     # ---- read requests (Fig. 4a) -----------------------------------------
     r_hit = r_req & hit
-    entry_valid = sw.state.valid[safe_cidx] & hit
+    entry_valid = (kvhit > 0) & valid
     want_enq = r_hit & entry_valid
     enq = rt.enqueue(
-        sw.reqtab, cidx, want_enq, pkts.client, pkts.seq, pkts.port, pkts.ts
+        sw.reqtab, cidx, want_enq, pkts.client, pkts.seq, pkts.port, pkts.ts,
+        kidx=pkts.kidx,
     )
     invalid_fwd = r_hit & ~entry_valid
 
     # key counters (paper §3.1: popularity per key, hits, overflow)
-    c_entries = sw.counters.popularity.shape[0]
-    pop_idx = jnp.where(r_hit, cidx, c_entries)
-    popularity = sw.counters.popularity.at[pop_idx].add(1, mode='drop')
+    popularity = sw.counters.popularity + pop_delta
     n_hit = jnp.sum(r_hit.astype(jnp.int32))
     n_overflow = jnp.sum(enq.overflow.astype(jnp.int32))
     n_invalid_fwd = jnp.sum(invalid_fwd.astype(jnp.int32))

@@ -125,6 +125,9 @@ class RequestTable(NamedTuple):
     port: jnp.ndarray    # int32[C * S]
     ts: jnp.ndarray      # float32[C * S] (prototype's latency register)
     acked: jnp.ndarray   # int32[C * S]  (§3.10 multi-fragment ACK counter)
+    kidx: jnp.ndarray    # int32[C * S]  requested key (simulation-side stand-in
+                         # for the paper's client-kept requested-key record;
+                         # the mismatch check itself stays client-side)
     qlen: jnp.ndarray    # int32[C]
     front: jnp.ndarray   # int32[C]
     rear: jnp.ndarray    # int32[C]
@@ -203,6 +206,7 @@ def init_switch_state(
             port=jnp.zeros((c * s,), jnp.int32),
             ts=jnp.zeros((c * s,), jnp.float32),
             acked=jnp.zeros((c * s,), jnp.int32),
+            kidx=jnp.full((c * s,), -1, jnp.int32),
             qlen=jnp.zeros((c,), jnp.int32),
             front=jnp.zeros((c,), jnp.int32),
             rear=jnp.zeros((c,), jnp.int32),

@@ -10,4 +10,114 @@ scatters have no TPU analogue — the MXU-native form of both is a one-hot
 matmul, so `orbit_match` (match-action lookup) and `cms` (count-min sketch
 update/query) are formulated as 128-aligned one-hot contractions, and
 `hot_gather` turns the hot-cache row fetch into an on-chip matmul gather.
+
+Backend dispatch
+----------------
+The simulator hot path calls the dispatchers below (``orbit_match``,
+``cms_update_query``, ``hot_gather``) instead of picking a kernel variant
+by hand.  The backend is resolved once per trace:
+
+  * ``pallas``     compiled Pallas kernels (the TPU hot path),
+  * ``interpret``  Pallas kernels under the interpreter (debugging,
+                   kernel-vs-oracle parity off-TPU),
+  * ``ref``        the pure-jnp oracles (fast XLA path on CPU/GPU).
+
+Resolution order: ``set_kernel_backend()`` > the ``REPRO_KERNEL_BACKEND``
+environment variable > autodetect (``pallas`` on TPU, ``ref`` elsewhere).
+Backend choice is baked into jitted callers at trace time, so flip it
+before building simulators.
 """
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+# Initialize the kernel subpackages BEFORE the same-named dispatchers below:
+# Python binds a submodule as a parent-package attribute at first import, so
+# importing them eagerly here guarantees the dispatcher functions (defined
+# afterwards) permanently shadow the subpackage attributes.
+from . import cms as _cms_pkg                  # noqa: F401, E402
+from . import hot_gather as _hot_gather_pkg    # noqa: F401, E402
+from . import orbit_match as _orbit_match_pkg  # noqa: F401, E402
+
+KERNEL_BACKENDS = ("pallas", "interpret", "ref")
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
+_forced: str | None = None
+
+
+def set_kernel_backend(name: str | None) -> None:
+    """Force a kernel backend for this process (``None`` restores auto)."""
+    global _forced
+    if name is not None and name not in KERNEL_BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"expected one of {KERNEL_BACKENDS}")
+    _forced = name
+
+
+def kernel_backend() -> str:
+    """Resolve the active backend: forced > env > autodetect."""
+    if _forced is not None:
+        return _forced
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env:
+        if env not in KERNEL_BACKENDS:
+            raise ValueError(f"{_ENV_VAR}={env!r}; "
+                             f"expected one of {KERNEL_BACKENDS}")
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# dispatchers
+# ---------------------------------------------------------------------------
+def orbit_match(hkey, table_hkeys, occupied, valid, pop_mask=None,
+                block_b: int = 256):
+    """Fused match-action lookup: (cidx [B], hit [B], valid_hit [B], pop [C]).
+
+    128-bit exact-match of ``hkey`` against the installed table entries,
+    validity filter, and per-entry popularity accumulation over the lanes
+    selected by ``pop_mask`` — one fused pass on the active backend.
+    """
+    be = kernel_backend()
+    if be == "ref":
+        from .orbit_match.ref import orbit_match_ref
+        return orbit_match_ref(hkey, table_hkeys, occupied, valid, pop_mask)
+    from .orbit_match.ops import orbit_match as _om
+    return _om(hkey, table_hkeys, occupied, valid, pop_mask,
+               block_b=block_b, interpret=(be == "interpret"))
+
+
+def cms_update_query(hkey, mask, counts, block_b: int = 256):
+    """Fused count-min sketch update+query on the active backend."""
+    be = kernel_backend()
+    if be == "ref":
+        # replay the kernel's tile order exactly (estimates are taken
+        # against the sketch state at the start of each batch tile)
+        from .cms.ops import rows_for
+        from .cms.ref import cms_update_query_ref
+        b = hkey.shape[0]
+        idx = rows_for(hkey, counts.shape[1])
+        msk = jnp.asarray(mask, jnp.int32)
+        tile = min(block_b, max(8, b))
+        pad = (-b) % tile
+        if pad:
+            idx = jnp.pad(idx, ((0, pad), (0, 0)))
+            msk = jnp.pad(msk, (0, pad))
+        new_counts, est = cms_update_query_ref(idx, msk, counts, block_b=tile)
+        return new_counts, est[:b]
+    from .cms.ops import cms_update_query as _cms
+    return _cms(hkey, mask, counts, block_b=block_b,
+                interpret=(be == "interpret"))
+
+
+def hot_gather(ids, hot_ids, rows, block_b: int = 256, block_d: int = 512):
+    """Hot-row gather-by-id on the active backend."""
+    be = kernel_backend()
+    if be == "ref":
+        from .hot_gather.ref import hot_gather_ref
+        return hot_gather_ref(ids, hot_ids, rows)
+    from .hot_gather.ops import hot_gather as _hg
+    return _hg(ids, hot_ids, rows, block_b=block_b, block_d=block_d,
+               interpret=(be == "interpret"))

@@ -22,13 +22,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _match_kernel(hkey_ref, table_ref, occ_ref, valid_ref,
+def _match_kernel(hkey_ref, table_ref, occ_ref, valid_ref, mask_ref,
                   cidx_ref, hit_ref, vhit_ref, pop_ref):
     step = pl.program_id(0)
     hk = hkey_ref[...]                       # [TB, 4] uint32
     tb = table_ref[...]                      # [C, 4] uint32
     occ = occ_ref[...]                       # [C] int32
     val = valid_ref[...]                     # [C] int32
+    msk = mask_ref[...]                      # [TB] int32 popularity gate
 
     # [TB, C]: full 128-bit equality (four 32-bit lanes)
     eq = jnp.ones(hk.shape[:1] + tb.shape[:1], dtype=jnp.bool_)
@@ -45,8 +46,9 @@ def _match_kernel(hkey_ref, table_ref, occ_ref, valid_ref,
     hit_ref[...] = hit.astype(jnp.int32)
     vhit_ref[...] = entry_valid.astype(jnp.int32)
 
-    # popularity accumulation across grid steps (same output block)
-    delta = jnp.sum(eq.astype(jnp.int32), axis=0)
+    # popularity accumulation across grid steps (same output block),
+    # gated per request (the switch counts only valid R-REQ lanes)
+    delta = jnp.sum((eq & (msk[:, None] > 0)).astype(jnp.int32), axis=0)
     @pl.when(step == 0)
     def _init():
         pop_ref[...] = delta
@@ -57,13 +59,14 @@ def _match_kernel(hkey_ref, table_ref, occ_ref, valid_ref,
 
 
 @partial(jax.jit, static_argnames=("block_b", "interpret"))
-def orbit_match(hkey, table_hkeys, occupied, valid, *, block_b: int = 256,
-                interpret: bool = True):
+def orbit_match(hkey, table_hkeys, occupied, valid, pop_mask, *,
+                block_b: int = 256, interpret: bool = True):
     """Batched lookup: returns (cidx [B], hit [B], valid_hit [B], pop [C]).
 
     Args:
       hkey: uint32[B, 4] request key hashes (B % block_b == 0; wrapper pads).
       table_hkeys: uint32[C, 4]; occupied/valid: int32[C] flags.
+      pop_mask: int32[B]; only masked lanes contribute to ``pop``.
     """
     b = hkey.shape[0]
     c = table_hkeys.shape[0]
@@ -76,6 +79,7 @@ def orbit_match(hkey, table_hkeys, occupied, valid, *, block_b: int = 256,
             pl.BlockSpec((c, 4), lambda i: (0, 0)),      # table resident
             pl.BlockSpec((c,), lambda i: (0,)),
             pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((block_b,), lambda i: (i,)),
@@ -90,4 +94,4 @@ def orbit_match(hkey, table_hkeys, occupied, valid, *, block_b: int = 256,
             jax.ShapeDtypeStruct((c,), jnp.int32),
         ],
         interpret=interpret,
-    )(hkey, table_hkeys, occupied, valid)
+    )(hkey, table_hkeys, occupied, valid, pop_mask)

@@ -4,14 +4,21 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def orbit_match_ref(hkey, table_hkeys, occupied, valid):
+def orbit_match_ref(hkey, table_hkeys, occupied, valid, pop_mask=None):
+    """Batched lookup oracle: (cidx [B], hit [B], valid_hit [B], pop [C]).
+
+    ``pop_mask`` gates which request lanes contribute to the popularity
+    accumulator (the switch counts only valid R-REQ lanes); ``None`` counts
+    every matching lane.
+    """
     eq = jnp.all(hkey[:, None, :] == table_hkeys[None, :, :], axis=-1)
     eq = eq & (occupied[None, :] > 0)
     hit = jnp.any(eq, axis=1)
     cidx = jnp.argmax(eq, axis=1).astype(jnp.int32)
     safe = jnp.where(hit, cidx, 0)
     entry_valid = (valid[safe] > 0) & hit
-    pop = jnp.sum(eq.astype(jnp.int32), axis=0)
+    pop_eq = eq if pop_mask is None else eq & (pop_mask[:, None] > 0)
+    pop = jnp.sum(pop_eq.astype(jnp.int32), axis=0)
     return (
         jnp.where(hit, cidx, -1),
         hit.astype(jnp.int32),

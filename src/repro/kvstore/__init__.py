@@ -1,4 +1,5 @@
 """Distributed key-value store substrate: stores, servers, clients, workloads,
 and the discrete-time rack simulator used by the paper's evaluation."""
-from .workload import WorkloadConfig, Workload  # noqa: F401
+from .workload import WorkloadConfig, Workload, WorkloadArrays  # noqa: F401
 from .simulator import RackConfig, RackSimulator  # noqa: F401
+from .fleet import BatchedRackSimulator  # noqa: F401

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import hash128_u32, server_of_key
+from repro.core.scatter_free import unique_writer
 from repro.core.types import (
     OP_CRN_REQ,
     OP_R_REP,
@@ -45,17 +46,23 @@ def bucket_edges_us() -> jnp.ndarray:
     return _LAT_BASE_US * (2.0 ** (np.arange(LAT_BUCKETS + 1) / 4.0))
 
 
+def _bucket_counts(bucket: jnp.ndarray) -> jnp.ndarray:
+    """int32[LAT_BUCKETS] histogram increments (scatter-free one-hot sum;
+    lanes with ``bucket == LAT_BUCKETS`` are dropped)."""
+    oh = bucket[:, None] == jnp.arange(LAT_BUCKETS)[None, :]
+    return jnp.sum(oh.astype(jnp.int32), axis=0)
+
+
 class ClientConfig(NamedTuple):
     batch: int = 512            # request lanes per window
     num_clients: int = 4        # paper testbed: 4 client nodes
-    out_width: int = 1 << 16    # outstanding-request ring (SEQ wraparound §3.6)
     crn_width: int = 64         # correction-request lanes per window
     base_rtt_us: float = 2.0    # wire+NIC baseline
     value_pad: int = 1438
+    subrounds: int = 1          # pipeline subrounds per window (batch layout)
 
 
 class ClientState(NamedTuple):
-    out_kidx: jnp.ndarray     # int32[out_width] requested key by seq % W
     next_seq: jnp.ndarray     # int32[]
     crn_kidx: jnp.ndarray     # int32[crn_width] pending corrections
     crn_n: jnp.ndarray        # int32[]
@@ -69,7 +76,6 @@ class ClientState(NamedTuple):
 
 def init_clients(cfg: ClientConfig) -> ClientState:
     return ClientState(
-        out_kidx=jnp.full((cfg.out_width,), -1, jnp.int32),
         next_seq=jnp.zeros((), jnp.int32),
         crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
         crn_n=jnp.zeros((), jnp.int32),
@@ -94,17 +100,36 @@ def generate(
     num_servers: int,
     now: jnp.ndarray,          # float32 us
 ) -> tuple[ClientState, PacketBatch]:
-    """One window of open-loop request generation (+ pending CRN drain)."""
+    """One window of open-loop request generation (+ pending CRN drain).
+
+    The batch is emitted **subround-major**: shape ``[R, L]`` where row ``r``
+    holds the lanes the switch pipeline sees in subround ``r`` (logical lane
+    ``j * R + r`` — arrivals spread over the window like real packet
+    interleaving; a contiguous split would slam the whole window's burst
+    into one pipeline pass and overflow the 8-deep request queues).  With
+    ``subrounds == 1`` this degenerates to the flat ``[1, B]`` batch.
+    """
     b = cfg.batch
+    r_sub = cfg.subrounds
+    if b % r_sub or cfg.crn_width % r_sub:
+        raise ValueError(
+            f"client batch ({b}) and crn_width ({cfg.crn_width}) must be "
+            f"multiples of subrounds ({r_sub})")
+    lc = b // r_sub
     r1, r2, r3 = jax.random.split(rng, 3)
     n = jnp.minimum(jax.random.poisson(r1, offered_per_window), b).astype(jnp.int32)
-    lane = jnp.arange(b, dtype=jnp.int32)
+    # lane[r, j] = j * R + r: the logical (arrival-order) lane id
+    lane = (jnp.arange(lc, dtype=jnp.int32)[None, :] * r_sub
+            + jnp.arange(r_sub, dtype=jnp.int32)[:, None])
     valid = lane < n
 
-    u = jax.random.uniform(r2, (b,), jnp.float32)
+    def ilv(x):  # flat [W, ...] -> [R, W // R, ...] in lane order
+        return x.reshape((x.shape[0] // r_sub, r_sub) + x.shape[1:]).swapaxes(0, 1)
+
+    u = ilv(jax.random.uniform(r2, (b,), jnp.float32))
     ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
     kidx = perm[jnp.clip(ranks, 0, perm.shape[0] - 1)]
-    is_write = jax.random.uniform(r3, (b,), jnp.float32) < write_ratio
+    is_write = ilv(jax.random.uniform(r3, (b,), jnp.float32)) < write_ratio
     seq = st.next_seq + lane
     op = jnp.where(is_write, OP_W_REQ, OP_R_REQ)
 
@@ -112,50 +137,45 @@ def generate(
         op=jnp.where(valid, op, 7),
         seq=seq,
         hkey=hash128_u32(kidx),
-        flag=jnp.zeros(b, jnp.int32),
+        flag=jnp.zeros((r_sub, lc), jnp.int32),
         kidx=kidx,
         vlen=vlen_table[kidx],
         client=seq % cfg.num_clients,
-        port=jnp.zeros(b, jnp.int32),
+        port=jnp.zeros((r_sub, lc), jnp.int32),
         server=server_of_key(kidx, num_servers),
-        ts=jnp.full(b, now, jnp.float32),
+        ts=jnp.full((r_sub, lc), now, jnp.float32),
         valid=valid,
-        val=jnp.zeros((b, cfg.value_pad), jnp.uint8),
+        val=jnp.zeros((r_sub, lc, cfg.value_pad), jnp.uint8),
     )
-    # record outstanding requested keys (reads; writes harmless to record)
-    slot = jnp.where(valid, seq % cfg.out_width, cfg.out_width)
-    out_kidx = st.out_kidx.at[slot].set(kidx, mode='drop')
 
     # pending correction requests ride along in dedicated lanes
-    crn_lane = jnp.arange(cfg.crn_width, dtype=jnp.int32)
+    lcrn = cfg.crn_width // r_sub
+    crn_lane = (jnp.arange(lcrn, dtype=jnp.int32)[None, :] * r_sub
+                + jnp.arange(r_sub, dtype=jnp.int32)[:, None])
     crn_valid = crn_lane < st.crn_n
-    crn_kidx = jnp.where(crn_valid, st.crn_kidx, 0)
+    crn_kidx = jnp.where(crn_valid, ilv(st.crn_kidx), 0)
     crn_seq = st.next_seq + b + crn_lane
     crn = PacketBatch(
         op=jnp.where(crn_valid, OP_CRN_REQ, 7),
         seq=crn_seq,
         hkey=hash128_u32(crn_kidx),
-        flag=jnp.zeros(cfg.crn_width, jnp.int32),
+        flag=jnp.zeros((r_sub, lcrn), jnp.int32),
         kidx=crn_kidx,
         vlen=vlen_table[crn_kidx],
         client=crn_seq % cfg.num_clients,
-        port=jnp.zeros(cfg.crn_width, jnp.int32),
+        port=jnp.zeros((r_sub, lcrn), jnp.int32),
         server=server_of_key(crn_kidx, num_servers),
-        ts=jnp.full(cfg.crn_width, now, jnp.float32),
+        ts=jnp.full((r_sub, lcrn), now, jnp.float32),
         valid=crn_valid,
-        val=jnp.zeros((cfg.crn_width, cfg.value_pad), jnp.uint8),
+        val=jnp.zeros((r_sub, lcrn, cfg.value_pad), jnp.uint8),
     )
-    crn_slot = jnp.where(crn_valid, crn_seq % cfg.out_width, cfg.out_width)
-    out_kidx = out_kidx.at[crn_slot].set(crn_kidx, mode='drop')
-
     st = st._replace(
-        out_kidx=out_kidx,
         next_seq=st.next_seq + b + cfg.crn_width,
         crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
         crn_n=jnp.zeros((), jnp.int32),
         tx=st.tx + n,
     )
-    batch = jax.tree.map(lambda a, c: jnp.concatenate([a, c]), pk, crn)
+    batch = jax.tree.map(lambda a, c: jnp.concatenate([a, c], axis=1), pk, crn)
     return st, batch
 
 
@@ -163,28 +183,34 @@ def account_switch_served(
     st: ClientState,
     cfg: ClientConfig,
     served: jnp.ndarray,     # bool[C, J]
-    seq: jnp.ndarray,        # int32[C, J]
+    req_kidx: jnp.ndarray,   # int32[C, J] key each served request asked for
     ts: jnp.ndarray,         # float32[C, J]
     line_kidx: jnp.ndarray,  # int32[C] key carried by the serving orbit line
     serve_time: jnp.ndarray, # float32[C, J] absolute time of service
 ) -> ClientState:
-    """Account orbit-served replies; detect wrong-key serves -> CRN queue."""
+    """Account orbit-served replies; detect wrong-key serves -> CRN queue.
+
+    The requested-vs-returned comparison is the paper's client-side
+    collision check; ``req_kidx`` (recorded with the queued request
+    metadata) is the simulator's stand-in for the client's own record of
+    what each SEQ asked for.
+    """
     lat = jnp.maximum(serve_time - ts, 0.05) + cfg.base_rtt_us
     bucket = jnp.where(served, lat_bucket(lat), LAT_BUCKETS)
-    hist = st.hist_switch.at[bucket.reshape(-1)].add(1, mode='drop')
+    hist = st.hist_switch + _bucket_counts(bucket.reshape(-1))
     n_served = jnp.sum(served.astype(jnp.int32))
 
-    expected = st.out_kidx[seq % cfg.out_width]           # [C, J]
+    expected = req_kidx
     mism = served & (expected != line_kidx[:, None])
     n_mism = jnp.sum(mism.astype(jnp.int32))
-    # append mismatched (expected) keys to the CRN buffer
+    # append mismatched (expected) keys to the CRN buffer, scatter-free:
+    # mismatches claim consecutive (distinct) buffer slots.
     flat_m = mism.reshape(-1)
     order = jnp.cumsum(flat_m.astype(jnp.int32)) - flat_m.astype(jnp.int32)
     dest = jnp.where(flat_m, st.crn_n + order, cfg.crn_width)
-    crn_kidx = st.crn_kidx.at[jnp.clip(dest, 0, cfg.crn_width)].set(
-        jnp.where(flat_m, jnp.broadcast_to(expected, mism.shape).reshape(-1), -1),
-        mode='drop',
-    )
+    writer, written = unique_writer(dest, flat_m, cfg.crn_width)
+    exp_flat = jnp.broadcast_to(expected, mism.shape).reshape(-1)
+    crn_kidx = jnp.where(written, exp_flat[writer], st.crn_kidx)
     crn_n = jnp.minimum(st.crn_n + n_mism, cfg.crn_width)
     return st._replace(
         hist_switch=hist,
@@ -210,7 +236,7 @@ def account_server_replies(
     is_rep = to_client & ((pkts.op == OP_R_REP) | (pkts.op == OP_W_REP)) & (pkts.port == 0)
     lat = jnp.maximum(now - pkts.ts, 0.05) + cfg.base_rtt_us
     bucket = jnp.where(is_rep, lat_bucket(lat), LAT_BUCKETS)
-    hist = st.hist_server.at[bucket].add(1, mode='drop')
+    hist = st.hist_server + _bucket_counts(bucket)
     return st._replace(
         hist_server=hist,
         rx_server=st.rx_server + jnp.sum(is_rep.astype(jnp.int32)),

@@ -1,0 +1,296 @@
+"""Batched multi-rack sweeps: one jitted scan runs N sweep points at once.
+
+The paper's evaluation (Figs. 9–18) — like NetCache's and TurboKV's — is
+dominated by wide parameter sweeps: offered load x zipf skew x value-size
+mix x scheme seeds.  Running each point as its own serial
+:class:`~repro.kvstore.simulator.RackSimulator` leaves the accelerator
+idle between many small dispatches; :class:`BatchedRackSimulator` instead
+``vmap``s the shared :func:`~repro.kvstore.simulator.window_step` over a
+leading rack axis, so a whole sweep advances in lockstep inside a single
+compiled ``lax.scan`` chunk.
+
+Sweep axes that change *data* (offered load, write ratio, Zipf CDF, value
+sizes, RNG seed) batch freely.  Axes that change *shapes or control flow*
+(scheme, cache_entries, num_servers, subrounds, ...) are static: group
+points by RackConfig and run one fleet per group.
+
+Workload arrays are stacked per-leaf only where points actually differ;
+leaves shared by every point (e.g. the rank permutation in a skew sweep,
+or everything in a load sweep) are passed unbatched (``in_axes=None``) so
+a 16-point sweep over a 10M-key workload does not hold 16 copies of it.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.netcache import netcache_install
+from repro.core.controller import CacheController, ControllerConfig
+
+from . import client as cl
+from .simulator import (
+    RackConfig,
+    SimCarry,
+    SimResult,
+    build_fetch_batch,
+    init_carry,
+    make_client_config,
+    make_server_config,
+    window_step,
+)
+from .workload import Workload, WorkloadArrays
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_take(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def compiled_batched_chunk(cfg: RackConfig, server_cfg, client_cfg,
+                           key_size: int, n: int,
+                           wl_axes: WorkloadArrays):
+    """Jitted vmapped ``n``-window chunk: ``(wl, carry) -> (carry, metrics)``.
+
+    ``wl_axes`` is a WorkloadArrays of vmap in_axes (0 = stacked per point,
+    None = shared); the batched carry is donated like the serial path.
+    The RNG seed is host-side only, so fleets differing only by seed share
+    one compilation; the active kernel backend is part of the cache key
+    because it is baked in at trace time.
+    """
+    from repro.kernels import kernel_backend
+    return _compiled_batched_chunk(replace(cfg, seed=0), server_cfg,
+                                   client_cfg, key_size, n, wl_axes,
+                                   kernel_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_batched_chunk(cfg: RackConfig, server_cfg, client_cfg,
+                            key_size: int, n: int,
+                            wl_axes: WorkloadArrays, kernel_backend: str):
+    def body(wl: WorkloadArrays, carry: SimCarry):
+        def one(wl_i, carry_i):
+            def step(c, x):
+                return window_step(cfg, server_cfg, client_cfg, key_size,
+                                   wl_i, c, x)
+            return jax.lax.scan(step, carry_i, None, length=n)
+        return jax.vmap(one, in_axes=(wl_axes, 0))(wl, carry)
+
+    return jax.jit(body, donate_argnums=(1,))
+
+
+class BatchedRackSimulator:
+    """N identically-shaped racks advancing in lockstep (one per sweep point).
+
+    Args:
+      cfg: the shared static rack configuration.
+      workloads: one Workload per point, or a single Workload shared by all.
+      offered_rps / write_ratios: per-point overrides (scalar broadcasts);
+        default to each point's workload config.
+      seeds: per-point RNG seeds (default: ``cfg.seed + point index`` so
+        replicated points decorrelate).
+      n_points: batch width when every other argument is scalar/shared.
+    """
+
+    def __init__(
+        self,
+        cfg: RackConfig,
+        workloads: Workload | Sequence[Workload],
+        offered_rps: float | Sequence[float] | None = None,
+        write_ratios: float | Sequence[float] | None = None,
+        seeds: Sequence[int] | None = None,
+        n_points: int | None = None,
+    ):
+        if isinstance(workloads, Workload):
+            workloads = [workloads]
+        workloads = list(workloads)
+
+        def _aslist(x):
+            if x is None or np.isscalar(x):
+                return None if x is None else [float(x)]
+            return [float(v) for v in x]
+
+        offered = _aslist(offered_rps)
+        ratios = _aslist(write_ratios)
+        n = max(
+            len(workloads),
+            len(offered) if offered else 1,
+            len(ratios) if ratios else 1,
+            len(seeds) if seeds is not None else 1,
+            n_points or 1,
+        )
+
+        def _bcast(xs, what):
+            if len(xs) == 1:
+                return xs * n
+            if len(xs) != n:
+                raise ValueError(f"{what}: got {len(xs)} entries for "
+                                 f"{n} sweep points")
+            return xs
+
+        workloads = _bcast(workloads, "workloads")
+        if any(w.cfg.num_keys != workloads[0].cfg.num_keys for w in workloads):
+            raise ValueError("all sweep points must share num_keys "
+                             "(array shapes are static)")
+        if any(w.cfg.key_size != workloads[0].cfg.key_size for w in workloads):
+            raise ValueError("all sweep points must share key_size")
+        offered = (_bcast(offered, "offered_rps") if offered
+                   else [w.cfg.offered_rps for w in workloads])
+        ratios = (_bcast(ratios, "write_ratios") if ratios
+                  else [w.cfg.write_ratio for w in workloads])
+        seeds = (list(seeds) if seeds is not None
+                 else [cfg.seed + i for i in range(n)])
+        seeds = _bcast(seeds, "seeds")
+
+        self.cfg = cfg
+        self.workloads = workloads
+        self.n_points = n
+        self.server_cfg = make_server_config(cfg)
+        self.client_cfg = make_client_config(cfg)
+        self.key_size = workloads[0].cfg.key_size
+        self.controllers = [
+            CacheController(ControllerConfig(
+                active_size=cfg.cache_entries, max_size=cfg.cache_entries))
+            for _ in range(n)
+        ]
+        self.carry = _tree_stack([
+            init_carry(cfg, self.server_cfg, self.client_cfg,
+                       workloads[i].cfg.num_keys, offered[i], ratios[i],
+                       seeds[i])
+            for i in range(n)
+        ])
+        # Workloads are fixed for the fleet's lifetime (churn is a serial-
+        # simulator feature), so stack/share their leaves once up front.
+        self._wl, self._wl_axes = self._wl_and_axes()
+
+    # ---------------------------------------------------------- workload axes
+    def _wl_and_axes(self) -> tuple[WorkloadArrays, WorkloadArrays]:
+        """Stack workload leaves only where points differ (else share)."""
+        ws = self.workloads
+        same_cdf = all((w.cfg.zipf_alpha, w.cfg.num_keys)
+                       == (ws[0].cfg.zipf_alpha, ws[0].cfg.num_keys)
+                       for w in ws)
+        same_vlen = all((w.cfg.value_sizes, w.cfg.value_seed, w.cfg.num_keys)
+                        == (ws[0].cfg.value_sizes, ws[0].cfg.value_seed,
+                            ws[0].cfg.num_keys)
+                        for w in ws)
+        same_perm = all(w is ws[0] or np.array_equal(w._perm_np, ws[0]._perm_np)
+                        for w in ws)
+        cdf = ws[0].cdf if same_cdf else jnp.stack([w.cdf for w in ws])
+        perm = ws[0].perm if same_perm else jnp.stack([w.perm for w in ws])
+        vlen = ws[0].vlen if same_vlen else jnp.stack([w.vlen for w in ws])
+        axes = WorkloadArrays(cdf=None if same_cdf else 0,
+                              perm=None if same_perm else 0,
+                              vlen=None if same_vlen else 0)
+        return WorkloadArrays(cdf=cdf, perm=perm, vlen=vlen), axes
+
+    # -------------------------------------------------------- dynamic knobs
+    def _per_point(self, x, dtype=jnp.float32):
+        arr = jnp.asarray(x, dtype)
+        return jnp.broadcast_to(arr, (self.n_points,)).astype(dtype)
+
+    def set_offered(self, rps) -> None:
+        """Per-point offered load (scalar broadcasts to every point)."""
+        lam = self._per_point(rps) * jnp.float32(self.cfg.window_us * 1e-6)
+        self.carry = self.carry._replace(offered=lam)
+
+    def set_write_ratio(self, r) -> None:
+        self.carry = self.carry._replace(write_ratio=self._per_point(r))
+
+    def reset_stats(self) -> None:
+        fresh = cl.init_clients(self.client_cfg)
+        fresh = jax.tree.map(
+            lambda x: jnp.stack([x] * self.n_points), fresh)
+        self.carry = self.carry._replace(clients=fresh._replace(
+            next_seq=self.carry.clients.next_seq,
+            crn_kidx=self.carry.clients.crn_kidx,
+            crn_n=self.carry.clients.crn_n,
+        ))
+
+    # ------------------------------------------------------------- preload
+    def preload(self, keys: Sequence[np.ndarray] | None = None) -> None:
+        """Install each point's hot set, then run warm-up windows."""
+        c = self.cfg
+        if c.scheme == "nocache":
+            return
+        if keys is None:
+            k = (c.cache_entries if c.scheme == "orbitcache"
+                 else c.netcache_entries)
+            keys = [w.hottest_keys(k) for w in self.workloads]
+        if c.scheme == "orbitcache":
+            pols, fbs = [], []
+            for i in range(self.n_points):
+                pol, fetches = self.controllers[i].preload(
+                    _tree_take(self.carry.policy, i), np.asarray(keys[i]))
+                pols.append(pol)
+                fbs.append(build_fetch_batch(c, self.workloads[i].vlen,
+                                             fetches))
+            self.carry = self.carry._replace(
+                policy=_tree_stack(pols), fetch=_tree_stack(fbs))
+            # warm: let F-REQs reach servers and F-REPs install orbit lines
+            self.run_windows(16)
+        elif c.scheme == "netcache":
+            pols = []
+            for i in range(self.n_points):
+                ks = np.asarray(keys[i])
+                st, _ = netcache_install(
+                    _tree_take(self.carry.policy, i), ks,
+                    self.workloads[i].vlen_np[ks],
+                    key_size=self.key_size,
+                    value_limit=c.netcache_value_limit,
+                )
+                pols.append(st)
+            self.carry = self.carry._replace(policy=_tree_stack(pols))
+
+    # ------------------------------------------------------------------ run
+    def _chunk(self, n: int, wl_axes: WorkloadArrays):
+        return compiled_batched_chunk(self.cfg, self.server_cfg,
+                                      self.client_cfg, self.key_size, n,
+                                      wl_axes)
+
+    def run_windows(self, n: int) -> dict[str, np.ndarray]:
+        """Advance every point ``n`` windows; traces are [N, n, ...]."""
+        carry, ys = self._chunk(n, self._wl_axes)(self._wl, self.carry)
+        self.carry = carry
+        return {k: np.asarray(v) for k, v in ys._asdict().items()}
+
+    def run(self, sim_seconds: float, chunk_windows: int = 256,
+            ) -> list[SimResult]:
+        """Run every point for ``sim_seconds``; one SimResult per point.
+
+        Periodic control-plane updates are host-side per-point surgery and
+        are not batched here — preload the hot set instead (all fixed-cache
+        sweeps: Figs. 9, 13, 16).  Use RackSimulator for Fig. 18 churn.
+        """
+        c = self.cfg
+        total = int(round(sim_seconds / (c.window_us * 1e-6)))
+        total = max(chunk_windows, (total // chunk_windows) * chunk_windows)
+        traces: list[dict[str, np.ndarray]] = []
+        done = 0
+        while done < total:
+            n = min(chunk_windows, total - done)
+            traces.append(self.run_windows(n))
+            done += n
+        merged = {k: np.concatenate([t[k] for t in traces], axis=1)
+                  for k in traces[0]}
+        hist_sw = np.asarray(self.carry.clients.hist_switch)
+        hist_srv = np.asarray(self.carry.clients.hist_server)
+        results = []
+        for i in range(self.n_points):
+            res = SimResult(
+                window_us=c.window_us,
+                traces={k: v[i] for k, v in merged.items()},
+            )
+            res.hist_switch = hist_sw[i]
+            res.hist_server = hist_srv[i]
+            res.info = dict(scheme=c.scheme, point=i)
+            results.append(res)
+        return results

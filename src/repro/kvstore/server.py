@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import hash128_u32
+from repro.core.scatter_free import unique_writer
 from repro.core.sketch import PopularityTracker, init_tracker, track
 from repro.core.types import (
     OP_CRN_REQ,
@@ -117,8 +118,11 @@ def server_step(
     dropped_now = jnp.sum((to_server & ~accepted)[:, None] & onehot, axis=0).astype(jnp.int32)
 
     slot = (st.rear[srv] + offset) % q
-    flat = jnp.where(accepted, srv * q + slot, n * q)
-    put = lambda arr, val: arr.reshape(-1).at[flat].set(val, mode='drop').reshape(n, q)
+    # Scatter-free enqueue: accepted packets land in distinct (server, slot)
+    # cells, so each cell's writer is unique.
+    writer, written = unique_writer(srv * q + slot, accepted, n * q)
+    put = lambda arr, val: jnp.where(written, val[writer],
+                                     arr.reshape(-1)).reshape(n, q)
     new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
     st = st._replace(
         op=put(st.op, pkts.op), kidx=put(st.kidx, pkts.kidx),

@@ -19,11 +19,21 @@ Time advances in windows (default 100 µs).  Each window:
 The inner loop is one jitted ``lax.scan`` per chunk; the control plane
 (cache updates, top-k reports, dynamic sizing, workload churn) runs on the
 host between chunks, exactly like the paper's switch-CPU controller.
+
+Hot-path layout: every ingress source is kept **subround-major** ``[R, L]``
+(clients emit it directly, server replies are interleaved once before they
+enter the carry), so the per-window ingress assembly is a single axis-1
+concatenation with no transposes of the value payload.  ``window_step`` is
+a module-level pure function over (configs, WorkloadArrays, carry): the
+workload arrays are explicit jit arguments (host-side churn needs no
+retrace) and the same compiled chunk is shared by every simulator with the
+same static config — including the vmapped multi-rack sweeps in
+``repro.kvstore.fleet``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
+import functools
+from dataclasses import dataclass, field, replace
 from typing import Any, NamedTuple
 
 import numpy as np
@@ -32,11 +42,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines.netcache import init_netcache, netcache_install, netcache_step
-from repro.baselines.nocache import nocache_step
 from repro.core import switch as swm
 from repro.core.controller import CacheController, ControllerConfig
 from repro.core.hashing import hash128_u32, server_of_key
-from repro.core.orbit import ServeGrid
 from repro.core.types import (
     OP_F_REQ,
     OP_NONE,
@@ -47,9 +55,11 @@ from repro.core.types import (
     empty_batch,
     init_switch_state,
 )
+from repro.baselines.nocache import nocache_step
+
 from . import client as cl
 from .server import ServerConfig, ServerState, init_servers, server_reports, server_step
-from .workload import Workload
+from .workload import Workload, WorkloadArrays
 
 HDR_BYTES = 62  # ethernet+ip+udp+orbitcache header overhead per cache packet
 
@@ -96,12 +106,288 @@ class SimCarry(NamedTuple):
     policy: Any                 # SwitchState | NetCacheState | () for nocache
     servers: ServerState
     clients: cl.ClientState
-    pending: PacketBatch        # server replies awaiting switch processing
-    fetch: PacketBatch          # controller-injected F-REQs (host-written)
+    pending: PacketBatch        # server replies awaiting the switch, [R, Lp]
+    fetch: PacketBatch          # controller-injected F-REQs, [R, Lf]
     rng: jax.Array
     now: jnp.ndarray            # float32 µs
     offered: jnp.ndarray        # float32 mean requests per window (Poisson λ)
     write_ratio: jnp.ndarray    # float32
+
+
+# ---------------------------------------------------------------------------
+# shared construction helpers (used by RackSimulator and fleet.py)
+# ---------------------------------------------------------------------------
+def make_server_config(cfg: RackConfig) -> ServerConfig:
+    return ServerConfig(
+        num_servers=cfg.num_servers,
+        queue_depth=cfg.server_queue,
+        cap_per_window=max(1, int(round(cfg.server_rps * cfg.window_us * 1e-6))),
+        value_pad=cfg.value_pad,
+        max_frags=cfg.max_frags,
+        track_popularity=cfg.track_popularity,
+    )
+
+
+def make_client_config(cfg: RackConfig) -> cl.ClientConfig:
+    return cl.ClientConfig(
+        batch=cfg.client_batch,
+        num_clients=cfg.num_clients,
+        value_pad=cfg.value_pad,
+        subrounds=cfg.subrounds,
+    )
+
+
+def interleave(batch: PacketBatch, subrounds: int) -> PacketBatch:
+    """Flat [W] lanes -> subround-major [R, W // R] (lane i -> row i % R)."""
+    def f(a):
+        return a.reshape((a.shape[0] // subrounds, subrounds) + a.shape[1:]
+                         ).swapaxes(0, 1)
+    return jax.tree.map(f, batch)
+
+
+def _reply_width(cfg: RackConfig, server_cfg: ServerConfig) -> tuple[int, int]:
+    """(flat server-reply width, static pad to a subround multiple)."""
+    w = cfg.num_servers * server_cfg.cap_per_window * cfg.max_frags
+    return w, (-w) % cfg.subrounds
+
+
+def init_policy(cfg: RackConfig):
+    if cfg.scheme == "orbitcache":
+        return init_switch_state(
+            cfg.cache_entries, cfg.queue_size, cfg.value_pad, cfg.max_frags
+        )
+    if cfg.scheme == "netcache":
+        return init_netcache(cfg.netcache_table, cfg.netcache_value_limit)
+    if cfg.scheme == "nocache":
+        return ()
+    raise ValueError(f"unknown scheme {cfg.scheme!r}")
+
+
+def init_carry(cfg: RackConfig, server_cfg: ServerConfig,
+               client_cfg: cl.ClientConfig, num_keys: int,
+               offered_rps: float, write_ratio: float, seed: int) -> SimCarry:
+    if cfg.fetch_lanes % cfg.subrounds:
+        raise ValueError(f"fetch_lanes ({cfg.fetch_lanes}) must be a "
+                         f"multiple of subrounds ({cfg.subrounds})")
+    reply_w, reply_pad = _reply_width(cfg, server_cfg)
+    return SimCarry(
+        policy=init_policy(cfg),
+        servers=init_servers(server_cfg, num_keys),
+        clients=cl.init_clients(client_cfg),
+        pending=interleave(empty_batch(reply_w + reply_pad, cfg.value_pad),
+                           cfg.subrounds),
+        fetch=interleave(empty_batch(cfg.fetch_lanes, cfg.value_pad),
+                         cfg.subrounds),
+        rng=jax.random.PRNGKey(seed),
+        now=jnp.float32(0.0),
+        offered=jnp.float32(offered_rps * cfg.window_us * 1e-6),
+        write_ratio=jnp.float32(write_ratio),
+    )
+
+
+def build_fetch_batch(cfg: RackConfig, vlen_table: jnp.ndarray,
+                      fetches: list[tuple[int, int]]) -> PacketBatch:
+    """Controller F-REQs as a subround-major fetch batch (paper §3.8)."""
+    fb = empty_batch(cfg.fetch_lanes, cfg.value_pad)
+    n = min(len(fetches), cfg.fetch_lanes)
+    if n:
+        ks = np.asarray([k for k, _ in fetches[:n]], np.int32)
+        kj = jnp.asarray(ks)
+        fb = fb._replace(
+            op=fb.op.at[:n].set(OP_F_REQ),
+            kidx=fb.kidx.at[:n].set(kj),
+            hkey=fb.hkey.at[:n].set(hash128_u32(kj)),
+            vlen=fb.vlen.at[:n].set(vlen_table[kj]),
+            server=fb.server.at[:n].set(server_of_key(kj, cfg.num_servers)),
+            valid=fb.valid.at[:n].set(True),
+        )
+    return interleave(fb, cfg.subrounds)
+
+
+# ---------------------------------------------------------------------------
+# the window step (pure; shared by serial and batched simulators)
+# ---------------------------------------------------------------------------
+def window_step(
+    cfg: RackConfig,
+    server_cfg: ServerConfig,
+    client_cfg: cl.ClientConfig,
+    key_size: int,
+    wl: WorkloadArrays,
+    carry: SimCarry,
+    _=None,
+) -> tuple[SimCarry, WindowMetrics]:
+    c = cfg
+    rng, r_gen = jax.random.split(carry.rng)
+    clients, reqs = cl.generate(
+        carry.clients, client_cfg, r_gen,
+        wl.cdf, wl.perm, wl.vlen,
+        carry.offered, carry.write_ratio, c.num_servers, carry.now,
+    )
+    # Every source is already subround-major [R, L]; ingress assembly is a
+    # single lane-axis concat (no per-window transposes of value payloads).
+    sub = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=1), reqs, carry.pending,
+        carry.fetch,
+    )
+    pad_to = sub.op.shape[0] * sub.op.shape[1]
+
+    window = jnp.float32(c.window_us)
+    if c.scheme == "orbitcache":
+        # recirculation budget in packets per subround: port bandwidth /
+        # mean live line size (header + key + value fragment)
+        def one_subround(sw: SwitchState, pk: PacketBatch):
+            live = sw.orbit.live
+            nlive = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+            mean_line = (
+                jnp.sum(jnp.where(live, sw.orbit.vlen, 0)) / nlive
+                + HDR_BYTES + key_size
+            )
+            pps = (c.recirc_gbps * 1e9 / 8.0) / mean_line
+            budget = (pps * window * 1e-6 / c.subrounds).astype(jnp.int32)
+            sw2, out = swm.switch_step(sw, pk, budget, c.max_serves)
+            interval_us = nlive.astype(jnp.float32) / pps * 1e6
+            return sw2, (out.route, out.flag, out.grid, out.stats, interval_us)
+
+        policy, (routes, flags, grids, stats, intervals) = jax.lax.scan(
+            one_subround, carry.policy, sub, unroll=c.subrounds
+        )
+        switch_reply = jnp.zeros((pad_to,), bool)
+        # account orbit-served replies (flatten subround dim into C)
+        r_idx = jnp.arange(c.subrounds, dtype=jnp.float32)[:, None, None]
+        serve_time = (
+            carry.now
+            + (r_idx + 0.5) * window / c.subrounds
+            + (grids.order.astype(jnp.float32) + 1.0) * intervals[:, None, None]
+        )
+        clients = cl.account_switch_served(
+            clients, client_cfg,
+            grids.served.reshape(-1, c.max_serves),
+            grids.req_kidx.reshape(-1, c.max_serves),
+            grids.ts.reshape(-1, c.max_serves),
+            grids.kidx.reshape(-1),
+            serve_time.reshape(-1, c.max_serves),
+        )
+        hits = jnp.sum(stats.n_hit)
+        overflow = jnp.sum(stats.n_overflow) + jnp.sum(stats.n_invalid_fwd)
+        installs = jnp.sum(stats.n_install)
+        crn = jnp.sum(stats.n_crn)
+        rx_sw = jnp.sum(stats.n_served)
+    elif c.scheme == "netcache":
+        def one_subround(st, pk):
+            st2, route, flag, srep, n_hit = netcache_step(st, pk)
+            return st2, (route, flag, srep, n_hit)
+
+        policy, (routes, flags, sreps, n_hits) = jax.lax.scan(
+            one_subround, carry.policy, sub, unroll=c.subrounds
+        )
+        switch_reply = sreps.reshape(-1)
+        hits = jnp.sum(n_hits)
+        overflow = jnp.zeros((), jnp.int32)
+        installs = jnp.zeros((), jnp.int32)
+        crn = jnp.zeros((), jnp.int32)
+        # switch-served latency ~ switch pipeline (sub-microsecond + wire)
+        lat = jnp.full((pad_to,), 1.0, jnp.float32) + client_cfg.base_rtt_us
+        bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
+        clients = clients._replace(
+            hist_switch=clients.hist_switch + cl._bucket_counts(bucket),
+            rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
+        )
+        rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
+    else:  # nocache
+        def one_subround(st, pk):
+            st2, route, flag = nocache_step(st, pk)
+            return st2, (route, flag)
+
+        policy, (routes, flags) = jax.lax.scan(one_subround, carry.policy,
+                                        sub, unroll=c.subrounds)
+        switch_reply = jnp.zeros((pad_to,), bool)
+        hits = overflow = installs = crn = jnp.zeros((), jnp.int32)
+        rx_sw = jnp.zeros((), jnp.int32)
+
+    route_flat = routes.reshape(-1)
+    flag_flat = flags.reshape(-1)
+    ing_flat = jax.tree.map(lambda a: a.reshape((pad_to,) + a.shape[2:]), sub)
+
+    # servers
+    to_server = (route_flat == ROUTE_SERVER) & ing_flat.valid
+    servers, sout = server_step(
+        carry.servers, server_cfg, ing_flat, to_server, flag_flat,
+        carry.now,
+    )
+
+    # replies forwarded to clients this window (previous window's server
+    # output routed through the switch)
+    to_client = (route_flat == ROUTE_CLIENT) & ing_flat.valid & ~switch_reply
+    rx_srv_before = clients.rx_server
+    clients = cl.account_server_replies(
+        clients, client_cfg, ing_flat, to_client, carry.now + window
+    )
+    rx_srv = clients.rx_server - rx_srv_before
+
+    # next window's pending: server replies, statically padded to a subround
+    # multiple once, then interleaved into the subround-major carry layout
+    reply_w, reply_pad = _reply_width(cfg, server_cfg)
+    rep = sout.replies
+    if reply_pad:
+        pad_b = empty_batch(reply_pad, c.value_pad)
+        rep = jax.tree.map(lambda a, p: jnp.concatenate([a, p]), rep, pad_b)
+    pending = interleave(rep, c.subrounds)
+
+    metrics = WindowMetrics(
+        tx=jnp.sum((reqs.valid & (reqs.op != OP_NONE)).astype(jnp.int32)),
+        rx_switch=rx_sw,
+        rx_server=rx_srv,
+        served=sout.served_now,
+        dropped=sout.dropped_now,
+        backlog=sout.backlog,
+        hits=hits,
+        overflow=overflow,
+        installs=installs,
+        crn=crn,
+        mismatches=clients.mismatches,
+    )
+    new_carry = SimCarry(
+        policy=policy,
+        servers=servers,
+        clients=clients,
+        pending=pending,
+        fetch=interleave(empty_batch(c.fetch_lanes, c.value_pad), c.subrounds),
+        rng=rng,
+        now=carry.now + window,
+        offered=carry.offered,
+        write_ratio=carry.write_ratio,
+    )
+    return new_carry, metrics
+
+
+def compiled_chunk(cfg: RackConfig, server_cfg: ServerConfig,
+                   client_cfg: cl.ClientConfig, key_size: int, n: int):
+    """Jitted ``n``-window chunk shared across simulator instances.
+
+    Signature: ``(wl: WorkloadArrays, carry) -> (carry, WindowMetrics)``.
+    The carry is donated (the previous window's buffers are dead the moment
+    the scan step returns); workload arrays are regular arguments so
+    host-side churn between chunks is picked up without retracing.  The
+    RNG seed is host-side only, so simulators differing only by seed share
+    one compilation.  The active kernel backend is part of the cache key:
+    it is baked in at trace time, so flipping it must not reuse a stale
+    compilation.
+    """
+    from repro.kernels import kernel_backend
+    return _compiled_chunk(replace(cfg, seed=0), server_cfg, client_cfg,
+                           key_size, n, kernel_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_chunk(cfg: RackConfig, server_cfg: ServerConfig,
+                    client_cfg: cl.ClientConfig, key_size: int, n: int,
+                    kernel_backend: str):
+    def body(wl: WorkloadArrays, carry: SimCarry):
+        def step(c, x):
+            return window_step(cfg, server_cfg, client_cfg, key_size, wl, c, x)
+        return jax.lax.scan(step, carry, None, length=n)
+
+    return jax.jit(body, donate_argnums=(1,))
 
 
 @dataclass
@@ -175,23 +461,12 @@ class RackSimulator:
     def __init__(self, cfg: RackConfig, wl: Workload):
         self.cfg = cfg
         self.wl = wl
-        self.server_cfg = ServerConfig(
-            num_servers=cfg.num_servers,
-            queue_depth=cfg.server_queue,
-            cap_per_window=max(1, int(round(cfg.server_rps * cfg.window_us * 1e-6))),
-            value_pad=cfg.value_pad,
-            max_frags=cfg.max_frags,
-            track_popularity=cfg.track_popularity,
-        )
-        self.client_cfg = cl.ClientConfig(
-            batch=cfg.client_batch,
-            num_clients=cfg.num_clients,
-            value_pad=cfg.value_pad,
-        )
+        self.server_cfg = make_server_config(cfg)
+        self.client_cfg = make_client_config(cfg)
+        self.key_size = wl.cfg.key_size
         self.controller = CacheController(ControllerConfig(
             active_size=cfg.cache_entries, max_size=cfg.cache_entries,
         ))
-        self._chunk_fn: dict[int, Any] = {}
         self.carry = self._init_carry()
 
     # -- dynamic knobs (no recompilation) -------------------------------------
@@ -205,38 +480,17 @@ class RackSimulator:
     def reset_stats(self) -> None:
         """Zero client histograms/counters (per-phase measurements)."""
         self.carry = self.carry._replace(clients=cl.init_clients(self.client_cfg)._replace(
-            out_kidx=self.carry.clients.out_kidx,
             next_seq=self.carry.clients.next_seq,
             crn_kidx=self.carry.clients.crn_kidx,
             crn_n=self.carry.clients.crn_n,
         ))
 
     # ------------------------------------------------------------------ setup
-    def _init_policy(self):
-        c = self.cfg
-        if c.scheme == "orbitcache":
-            return init_switch_state(
-                c.cache_entries, c.queue_size, c.value_pad, c.max_frags
-            )
-        if c.scheme == "netcache":
-            return init_netcache(c.netcache_table, c.netcache_value_limit)
-        if c.scheme == "nocache":
-            return ()
-        raise ValueError(f"unknown scheme {c.scheme!r}")
-
     def _init_carry(self) -> SimCarry:
-        c = self.cfg
-        reply_w = c.num_servers * self.server_cfg.cap_per_window * c.max_frags
-        return SimCarry(
-            policy=self._init_policy(),
-            servers=init_servers(self.server_cfg, self.wl.cfg.num_keys),
-            clients=cl.init_clients(self.client_cfg),
-            pending=empty_batch(reply_w, c.value_pad),
-            fetch=empty_batch(c.fetch_lanes, c.value_pad),
-            rng=jax.random.PRNGKey(c.seed),
-            now=jnp.float32(0.0),
-            offered=jnp.float32(self.wl.cfg.offered_rps * c.window_us * 1e-6),
-            write_ratio=jnp.float32(self.wl.cfg.write_ratio),
+        return init_carry(
+            self.cfg, self.server_cfg, self.client_cfg,
+            self.wl.cfg.num_keys, self.wl.cfg.offered_rps,
+            self.wl.cfg.write_ratio, self.cfg.seed,
         )
 
     # -------------------------------------------------------------- preload
@@ -262,179 +516,16 @@ class RackSimulator:
     def inject_fetches(self, fetches: list[tuple[int, int]]) -> None:
         """Queue controller F-REQs for the next window (value fetch via the
         data plane, paper §3.8)."""
-        c = self.cfg
-        fb = empty_batch(c.fetch_lanes, c.value_pad)
-        n = min(len(fetches), c.fetch_lanes)
-        if n == 0:
-            self.carry = self.carry._replace(fetch=fb)
-            return
-        ks = np.asarray([k for k, _ in fetches[:n]], np.int32)
-        kj = jnp.asarray(ks)
-        fb = fb._replace(
-            op=fb.op.at[:n].set(OP_F_REQ),
-            kidx=fb.kidx.at[:n].set(kj),
-            hkey=fb.hkey.at[:n].set(hash128_u32(kj)),
-            vlen=fb.vlen.at[:n].set(self.wl.vlen[kj]),
-            server=fb.server.at[:n].set(server_of_key(kj, c.num_servers)),
-            valid=fb.valid.at[:n].set(True),
-        )
-        self.carry = self.carry._replace(fetch=fb)
-
-    # ---------------------------------------------------------------- window
-    def _window_step(self, carry: SimCarry, _) -> tuple[SimCarry, WindowMetrics]:
-        c = self.cfg
-        rng, r_gen = jax.random.split(carry.rng)
-        clients, reqs = cl.generate(
-            carry.clients, self.client_cfg, r_gen,
-            self.wl.cdf, self.wl.perm, self.wl.vlen,
-            carry.offered, carry.write_ratio, c.num_servers, carry.now,
-        )
-        ingress = jax.tree.map(
-            lambda *xs: jnp.concatenate(xs), reqs, carry.pending, carry.fetch
-        )
-        total = ingress.op.shape[0]
-        pad_to = ((total + c.subrounds - 1) // c.subrounds) * c.subrounds
-        if pad_to != total:
-            padding = empty_batch(pad_to - total, c.value_pad)
-            ingress = jax.tree.map(lambda a, p: jnp.concatenate([a, p]), ingress, padding)
-        # Interleave lanes across subrounds (lane i -> subround i % R):
-        # arrivals spread over the window like real packet interleaving —
-        # a contiguous split would slam the whole window's burst into one
-        # pipeline pass and overflow the 8-deep request queues.
-        sub = jax.tree.map(
-            lambda a: a.reshape((pad_to // c.subrounds, c.subrounds) + a.shape[1:])
-            .swapaxes(0, 1),
-            ingress,
-        )
-
-        window = jnp.float32(c.window_us)
-        if c.scheme == "orbitcache":
-            # recirculation budget in packets per subround: port bandwidth /
-            # mean live line size (header + key + value fragment)
-            def one_subround(sw: SwitchState, pk: PacketBatch):
-                live = sw.orbit.live
-                nlive = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
-                mean_line = (
-                    jnp.sum(jnp.where(live, sw.orbit.vlen, 0)) / nlive
-                    + HDR_BYTES + self.wl.cfg.key_size
-                )
-                pps = (c.recirc_gbps * 1e9 / 8.0) / mean_line
-                budget = (pps * window * 1e-6 / c.subrounds).astype(jnp.int32)
-                sw2, out = swm.switch_step(sw, pk, budget, c.max_serves)
-                interval_us = nlive.astype(jnp.float32) / pps * 1e6
-                return sw2, (out.route, out.flag, out.grid, out.stats, interval_us)
-
-            policy, (routes, flags, grids, stats, intervals) = jax.lax.scan(
-                one_subround, carry.policy, sub
-            )
-            switch_reply = jnp.zeros((pad_to,), bool)
-            # account orbit-served replies (flatten subround dim into C)
-            r_idx = jnp.arange(c.subrounds, dtype=jnp.float32)[:, None, None]
-            serve_time = (
-                carry.now
-                + (r_idx + 0.5) * window / c.subrounds
-                + (grids.order.astype(jnp.float32) + 1.0) * intervals[:, None, None]
-            )
-            clients = cl.account_switch_served(
-                clients, self.client_cfg,
-                grids.served.reshape(-1, c.max_serves),
-                grids.seq.reshape(-1, c.max_serves),
-                grids.ts.reshape(-1, c.max_serves),
-                grids.kidx.reshape(-1),
-                serve_time.reshape(-1, c.max_serves),
-            )
-            hits = jnp.sum(stats.n_hit)
-            overflow = jnp.sum(stats.n_overflow) + jnp.sum(stats.n_invalid_fwd)
-            installs = jnp.sum(stats.n_install)
-            crn = jnp.sum(stats.n_crn)
-            rx_sw = jnp.sum(stats.n_served)
-        elif c.scheme == "netcache":
-            def one_subround(st, pk):
-                st2, route, flag, srep, n_hit = netcache_step(st, pk)
-                return st2, (route, flag, srep, n_hit)
-
-            policy, (routes, flags, sreps, n_hits) = jax.lax.scan(
-                one_subround, carry.policy, sub
-            )
-            switch_reply = sreps.reshape(-1)
-            hits = jnp.sum(n_hits)
-            overflow = jnp.zeros((), jnp.int32)
-            installs = jnp.zeros((), jnp.int32)
-            crn = jnp.zeros((), jnp.int32)
-            # switch-served latency ~ switch pipeline (sub-microsecond + wire)
-            lat = jnp.full((pad_to,), 1.0, jnp.float32) + self.client_cfg.base_rtt_us
-            bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
-            clients = clients._replace(
-                hist_switch=clients.hist_switch.at[bucket].add(1, mode='drop'),
-                rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
-            )
-            rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
-        else:  # nocache
-            def one_subround(st, pk):
-                st2, route, flag = nocache_step(st, pk)
-                return st2, (route, flag)
-
-            policy, (routes, flags) = jax.lax.scan(one_subround, carry.policy, sub)
-            switch_reply = jnp.zeros((pad_to,), bool)
-            hits = overflow = installs = crn = jnp.zeros((), jnp.int32)
-            rx_sw = jnp.zeros((), jnp.int32)
-
-        route_flat = routes.reshape(-1)
-        flag_flat = flags.reshape(-1)
-        ing_flat = jax.tree.map(lambda a: a.reshape((pad_to,) + a.shape[2:]), sub)
-
-        # servers
-        to_server = (route_flat == ROUTE_SERVER) & ing_flat.valid
-        servers, sout = server_step(
-            carry.servers, self.server_cfg, ing_flat, to_server, flag_flat,
-            carry.now,
-        )
-
-        # replies forwarded to clients this window (previous window's server
-        # output routed through the switch)
-        to_client = (route_flat == ROUTE_CLIENT) & ing_flat.valid & ~switch_reply
-        rx_srv_before = clients.rx_server
-        clients = cl.account_server_replies(
-            clients, self.client_cfg, ing_flat, to_client, carry.now + window
-        )
-        rx_srv = clients.rx_server - rx_srv_before
-
-        metrics = WindowMetrics(
-            tx=jnp.sum((reqs.valid & (reqs.op != OP_NONE)).astype(jnp.int32)),
-            rx_switch=rx_sw,
-            rx_server=rx_srv,
-            served=sout.served_now,
-            dropped=sout.dropped_now,
-            backlog=sout.backlog,
-            hits=hits,
-            overflow=overflow,
-            installs=installs,
-            crn=crn,
-            mismatches=clients.mismatches,
-        )
-        new_carry = SimCarry(
-            policy=policy,
-            servers=servers,
-            clients=clients,
-            pending=sout.replies,
-            fetch=empty_batch(c.fetch_lanes, c.value_pad),
-            rng=rng,
-            now=carry.now + window,
-            offered=carry.offered,
-            write_ratio=carry.write_ratio,
-        )
-        return new_carry, metrics
+        self.carry = self.carry._replace(
+            fetch=build_fetch_batch(self.cfg, self.wl.vlen, fetches))
 
     # ------------------------------------------------------------------ run
     def _chunk(self, n: int):
-        if n not in self._chunk_fn:
-            def body(carry):
-                return jax.lax.scan(self._window_step, carry, None, length=n)
-            self._chunk_fn[n] = jax.jit(body)
-        return self._chunk_fn[n]
+        return compiled_chunk(self.cfg, self.server_cfg, self.client_cfg,
+                              self.key_size, n)
 
     def run_windows(self, n: int) -> dict[str, np.ndarray]:
-        carry, ys = self._chunk(n)(self.carry)
+        carry, ys = self._chunk(n)(self.wl.arrays, self.carry)
         self.carry = carry
         return {k: np.asarray(v) for k, v in ys._asdict().items()}
 

@@ -14,6 +14,7 @@ stable, matching how the paper assigns its 64 B/1024 B split.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import NamedTuple
 
 import numpy as np
 
@@ -21,6 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import hash128_u32_np
+
+
+class WorkloadArrays(NamedTuple):
+    """The device-side workload state the jitted window step consumes.
+
+    Kept separate from :class:`Workload` so it can be (a) passed as an
+    explicit jit argument — host-side churn (``hot_in_swap``) is picked up
+    without retracing — and (b) stacked/vmapped over a leading rack axis
+    for batched multi-rack sweeps (``repro.kvstore.fleet``).
+    """
+
+    cdf: jnp.ndarray   # float32[num_keys] Zipf CDF over popularity ranks
+    perm: jnp.ndarray  # int32[num_keys] rank -> key identity
+    vlen: jnp.ndarray  # int32[num_keys] per-key value bytes
 
 
 @dataclass(frozen=True)
@@ -92,6 +107,11 @@ class Workload:
         sizes[sizes == 0] = cfg.value_sizes[-1][0]
         self.vlen_np = sizes
         self.vlen = jnp.asarray(sizes)
+
+    @property
+    def arrays(self) -> WorkloadArrays:
+        """Current device arrays (fresh after any churn)."""
+        return WorkloadArrays(cdf=self.cdf, perm=self.perm, vlen=self.vlen)
 
     # -- sampling (jit-friendly) ---------------------------------------------
     def sample_ranks(self, rng: jax.Array, batch: int) -> jnp.ndarray:

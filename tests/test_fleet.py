@@ -1,0 +1,84 @@
+"""BatchedRackSimulator: vmapped sweep points == serial RackSimulator runs.
+
+Each batched point must reproduce the serial simulator exactly (same RNG
+seed => bit-identical traces): the fleet is a pure batching transform, not
+an approximation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.kvstore.fleet import BatchedRackSimulator
+from repro.kvstore.simulator import RackConfig, RackSimulator
+from repro.kvstore.workload import Workload, WorkloadConfig
+
+CFG = RackConfig(scheme="orbitcache", cache_entries=64, num_servers=8,
+                 client_batch=256, fetch_lanes=64)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return Workload(WorkloadConfig(num_keys=20_000, offered_rps=2.0e6))
+
+
+def _serial(cfg, wl, seed, windows=24):
+    sim = RackSimulator(dataclasses.replace(cfg, seed=seed), wl)
+    if cfg.scheme == "orbitcache":
+        sim.preload(wl.hottest_keys(cfg.cache_entries))
+    elif cfg.scheme == "netcache":
+        sim.preload(wl.hottest_keys(2000))
+    return sim.run_windows(windows)
+
+
+@pytest.mark.parametrize("scheme", ["orbitcache", "netcache", "nocache"])
+def test_batched_points_match_serial(wl, scheme):
+    cfg = dataclasses.replace(CFG, scheme=scheme)
+    bsim = BatchedRackSimulator(cfg, wl, seeds=[0, 3])
+    if scheme == "netcache":
+        bsim.preload([wl.hottest_keys(2000)] * 2)
+    else:
+        bsim.preload()
+    got = bsim.run_windows(24)
+    for i, seed in enumerate((0, 3)):
+        want = _serial(cfg, wl, seed)
+        for k in want:
+            np.testing.assert_array_equal(
+                got[k][i], want[k],
+                err_msg=f"{scheme} point {i} (seed {seed}): trace {k!r}")
+
+
+def test_batched_offered_sweep_orders_load(wl):
+    """A load sweep in one fleet: tx scales with per-point offered load."""
+    loads = (0.5e6, 1.0e6, 2.0e6)
+    bsim = BatchedRackSimulator(CFG, wl, offered_rps=loads)
+    bsim.preload()
+    bsim.reset_stats()
+    res = bsim.run(0.01, chunk_windows=64)
+    assert len(res) == 3
+    tx = [r.offered_rps(burn_frac=0.0) for r in res]
+    assert tx[0] < tx[1] < tx[2]
+    for got, load in zip(tx, loads):
+        assert abs(got - load) / load < 0.15
+
+
+def test_batched_shares_unchanged_workload_leaves(wl):
+    wl2 = Workload(WorkloadConfig(num_keys=20_000, zipf_alpha=0.9,
+                                  offered_rps=2.0e6))
+    # same point replicated: every leaf shared
+    b1 = BatchedRackSimulator(CFG, wl, n_points=4)
+    _, axes = b1._wl_and_axes()
+    assert axes == (None, None, None)
+    # skew sweep: only the CDF is stacked
+    b2 = BatchedRackSimulator(CFG, [wl, wl2])
+    arrs, axes = b2._wl_and_axes()
+    assert axes.cdf == 0 and axes.perm is None and axes.vlen is None
+    assert arrs.cdf.shape == (2, 20_000)
+
+
+def test_batched_rejects_mismatched_points(wl):
+    small = Workload(WorkloadConfig(num_keys=5_000))
+    with pytest.raises(ValueError, match="num_keys"):
+        BatchedRackSimulator(CFG, [wl, small])
+    with pytest.raises(ValueError, match="sweep points"):
+        BatchedRackSimulator(CFG, [wl, wl, wl], offered_rps=(1e6, 2e6))

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from repro import kernels
 from repro.core.hashing import hash128_u32
 from repro.kernels.cms.ops import cms_update_query, rows_for
 from repro.kernels.cms.ref import cms_update_query_ref
@@ -30,25 +30,31 @@ def test_orbit_match_sweep(b, c):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@given(st.integers(1, 200), st.integers(1, 64), st.integers(8, 64))
-@settings(max_examples=15, deadline=None)
-def test_orbit_match_property(b, c, universe):
-    c = min(c, universe)  # table keys must be distinct (controller invariant)
-    keys = jnp.asarray(RNG.choice(universe, c, replace=False), jnp.int32)
-    table = hash128_u32(keys)
-    occ = jnp.ones(c, jnp.int32)
-    val = jnp.ones(c, jnp.int32)
-    q = jnp.asarray(RNG.integers(0, universe, b), jnp.int32)
-    cidx, hit, vhit, pop = orbit_match(hash128_u32(q), table, occ, val)
-    # every reported hit indexes an entry whose key hash matches
-    cidx_np, hit_np = np.asarray(cidx), np.asarray(hit)
-    keys_np, q_np = np.asarray(keys), np.asarray(q)
-    for i in range(b):
-        if hit_np[i]:
-            assert keys_np[cidx_np[i]] == q_np[i]
-        else:
-            assert q_np[i] not in set(keys_np.tolist())
-    assert int(pop.sum()) == int(hit.sum())
+def test_orbit_match_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 200), st.integers(1, 64), st.integers(8, 64))
+    def check(b, c, universe):
+        c = min(c, universe)  # table keys distinct (controller invariant)
+        keys = jnp.asarray(RNG.choice(universe, c, replace=False), jnp.int32)
+        table = hash128_u32(keys)
+        occ = jnp.ones(c, jnp.int32)
+        val = jnp.ones(c, jnp.int32)
+        q = jnp.asarray(RNG.integers(0, universe, b), jnp.int32)
+        cidx, hit, vhit, pop = orbit_match(hash128_u32(q), table, occ, val)
+        # every reported hit indexes an entry whose key hash matches
+        cidx_np, hit_np = np.asarray(cidx), np.asarray(hit)
+        keys_np, q_np = np.asarray(keys), np.asarray(q)
+        for i in range(b):
+            if hit_np[i]:
+                assert keys_np[cidx_np[i]] == q_np[i]
+            else:
+                assert q_np[i] not in set(keys_np.tolist())
+        assert int(pop.sum()) == int(hit.sum())
+
+    check()
 
 
 @pytest.mark.parametrize("b,w,block", [(64, 512, 64), (513, 2048, 256),
@@ -64,6 +70,71 @@ def test_cms_sweep(b, w, block):
     nr, er = cms_update_query_ref(idx, msk, counts, block_b=min(block, max(8, b)))
     np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
     np.testing.assert_array_equal(np.asarray(ek), np.asarray(er[:b]))
+
+
+# ---------------------------------------------------------------------------
+# parity edge cases: pad-tail batches, empty tables, all-invalid entries
+# ---------------------------------------------------------------------------
+def _match_case(b, c, occ, val, mask=None, block_b=256):
+    keys = jnp.asarray(RNG.integers(0, 50, c), jnp.int32)
+    table = hash128_u32(keys)
+    q = jnp.asarray(RNG.integers(0, 60, b), jnp.int32)
+    hq = hash128_u32(q)
+    got = orbit_match(hq, table, occ, val, mask, block_b=block_b)
+    want = orbit_match_ref(hq, table, occ, val, mask)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_orbit_match_batch_not_block_multiple():
+    # B % block_b != 0: the wrapper pads, pad lanes must not leak into pop
+    mask = jnp.asarray(RNG.integers(0, 2, 37), jnp.int32)
+    _match_case(37, 16, jnp.ones(16, jnp.int32), jnp.ones(16, jnp.int32),
+                mask=mask, block_b=32)
+
+
+def test_orbit_match_empty_table():
+    # nothing occupied: all misses, zero popularity
+    b, c = 40, 8
+    occ = jnp.zeros(c, jnp.int32)
+    val = jnp.ones(c, jnp.int32)
+    keys = jnp.asarray(RNG.integers(0, 50, c), jnp.int32)
+    q = jnp.asarray(RNG.integers(0, 50, b), jnp.int32)
+    cidx, hit, vhit, pop = orbit_match(hash128_u32(q), hash128_u32(keys),
+                                       occ, val)
+    assert np.asarray(cidx).tolist() == [-1] * b
+    assert int(np.asarray(hit).sum()) == 0
+    assert int(np.asarray(vhit).sum()) == 0
+    assert int(np.asarray(pop).sum()) == 0
+    _match_case(b, c, occ, val)
+
+
+def test_orbit_match_all_invalid_entries():
+    # occupied but invalid: hits happen, valid-hits never
+    b, c = 64, 8
+    occ = jnp.ones(c, jnp.int32)
+    val = jnp.zeros(c, jnp.int32)
+    keys = jnp.arange(c, dtype=jnp.int32)
+    q = jnp.asarray(RNG.integers(0, c, b), jnp.int32)
+    cidx, hit, vhit, pop = orbit_match(hash128_u32(q), hash128_u32(keys),
+                                       occ, val)
+    assert int(np.asarray(hit).sum()) == b
+    assert int(np.asarray(vhit).sum()) == 0
+    _match_case(b, c, occ, val)
+
+
+def test_orbit_match_mask_parity():
+    # masked popularity: kernel == oracle == hand count
+    b, c = 48, 8
+    keys = jnp.arange(c, dtype=jnp.int32)
+    q = jnp.asarray(RNG.integers(0, c, b), jnp.int32)
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    occ = jnp.ones(c, jnp.int32)
+    val = jnp.ones(c, jnp.int32)
+    for fn in (orbit_match, orbit_match_ref):
+        _, _, _, pop = fn(hash128_u32(q), hash128_u32(keys), occ, val, mask)
+        want = np.bincount(np.asarray(q)[np.asarray(mask) > 0], minlength=c)
+        np.testing.assert_array_equal(np.asarray(pop), want)
 
 
 @pytest.mark.parametrize("b,c,d,dt", [
@@ -82,3 +153,85 @@ def test_hot_gather_sweep(b, c, d, dt):
                                np.asarray(want, np.float32),
                                rtol=2e-2, atol=2e-2)
     np.testing.assert_array_equal(np.asarray(hit), np.asarray(hit_w))
+
+
+def test_cms_batch_not_block_multiple():
+    # B % block_b != 0 and masked lanes: kernel pad tail must not count
+    b, w, block = 45, 512, 32
+    hk = hash128_u32(jnp.asarray(RNG.integers(0, 200, b), jnp.int32))
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    counts = jnp.zeros((5, w), jnp.int32)
+    nk, ek = cms_update_query(hk, mask, counts, block_b=block)
+    idx = jnp.pad(rows_for(hk, w), ((0, (-b) % block), (0, 0)))
+    msk = jnp.pad(mask, (0, (-b) % block))
+    nr, er = cms_update_query_ref(idx, msk, counts, block_b=block)
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er[:b]))
+    assert int(np.asarray(nk).sum()) == 5 * int(np.asarray(mask).sum())
+
+
+def test_hot_gather_all_misses():
+    # no id in the hot set: zero rows, zero hits (both paths)
+    b, c, d = 33, 16, 128
+    ids = jnp.asarray(RNG.integers(1000, 2000, b), jnp.int32)
+    hot = jnp.arange(c, dtype=jnp.int32)
+    rows = jnp.asarray(RNG.normal(size=(c, d)), jnp.float32)
+    out, hit = hot_gather(ids, hot, rows)
+    want, hit_w = hot_gather_ref(ids, hot, rows)
+    assert int(np.asarray(hit).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(hit_w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# backend dispatch layer
+# ---------------------------------------------------------------------------
+def test_dispatch_autodetect_picks_oracle_off_tpu(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    kernels.set_kernel_backend(None)
+    expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert kernels.kernel_backend() == expect
+
+
+def test_dispatch_env_and_forced_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    kernels.set_kernel_backend(None)
+    assert kernels.kernel_backend() == "interpret"
+    kernels.set_kernel_backend("ref")
+    try:
+        assert kernels.kernel_backend() == "ref"  # forced beats env
+    finally:
+        kernels.set_kernel_backend(None)
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        kernels.kernel_backend()
+    with pytest.raises(ValueError):
+        kernels.set_kernel_backend("bogus")
+
+
+def test_dispatch_matches_oracles_on_all_backends():
+    b, c = 40, 16
+    keys = jnp.asarray(RNG.integers(0, 30, c), jnp.int32)
+    occ = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+    val = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+    q = jnp.asarray(RNG.integers(0, 40, b), jnp.int32)
+    hq, table = hash128_u32(q), hash128_u32(keys)
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    counts = jnp.asarray(RNG.integers(0, 5, (5, 256)), jnp.int32)
+    want_match = orbit_match_ref(hq, table, occ, val, mask)
+    widx = jnp.pad(rows_for(hq, 256), ((0, 0), (0, 0)))
+    want_cms = cms_update_query_ref(widx, mask, counts, block_b=b)
+    for be in ("ref", "interpret"):
+        kernels.set_kernel_backend(be)
+        try:
+            got = kernels.orbit_match(hq, table, occ, val, mask)
+            for g, w in zip(got, want_match):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+            nk, ek = kernels.cms_update_query(hq, mask, counts)
+            np.testing.assert_array_equal(np.asarray(nk),
+                                          np.asarray(want_cms[0]))
+            np.testing.assert_array_equal(np.asarray(ek),
+                                          np.asarray(want_cms[1][:b]))
+        finally:
+            kernels.set_kernel_backend(None)

@@ -4,7 +4,7 @@ from collections import deque
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import request_table as rt
 from repro.core.types import init_switch_state
@@ -65,11 +65,27 @@ def test_wraparound():
     assert deq.seq[0].tolist() == [2, 10, 11, 12]
 
 
-@given(st.lists(st.tuples(st.sampled_from(["enq", "pop"]),
-                          st.integers(0, 2), st.integers(1, 3)),
-                min_size=1, max_size=30))
-@settings(max_examples=60, deadline=None)
-def test_matches_deque_model(ops):
+def test_matches_deque_model():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["enq", "pop"]),
+                              st.integers(0, 2), st.integers(1, 3)),
+                    min_size=1, max_size=30))
+    def check(ops):
+        _run_deque_model(ops)
+
+    check()
+
+
+def test_matches_deque_model_deterministic():
+    _run_deque_model([("enq", 0, 3), ("pop", 0, 2), ("enq", 1, 2),
+                      ("enq", 0, 3), ("pop", 1, 1), ("enq", 2, 3),
+                      ("pop", 0, 3), ("enq", 0, 2)])
+
+
+def _run_deque_model(ops):
     c, s = 3, 4
     table = fresh(c, s)
     model = [deque() for _ in range(c)]

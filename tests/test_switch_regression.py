@@ -1,0 +1,191 @@
+"""switch_step kernel-dispatch regression: bit-identical to the seed path.
+
+The seed implementation did the lookup with ``lookup.lookup`` (pure [B, C]
+compare), a separate validity check, and a scatter-add popularity update.
+The dataplane now routes all three through the fused ``repro.kernels
+.orbit_match`` dispatcher.  This test replays mixed-op traffic through both
+implementations and asserts the StepOutput AND the resulting switch state
+are bit-identical, on the oracle backend and the Pallas interpreter.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as kn
+from repro.core import lookup as lk
+from repro.core import orbit as ob
+from repro.core import request_table as rt
+from repro.core import state_table as stt
+from repro.core import switch as swm
+from repro.core.controller import CacheController, ControllerConfig
+from repro.core.hashing import hash128_u32
+from repro.core.types import (
+    OP_CRN_REQ, OP_F_REP, OP_R_REQ, OP_W_REP, OP_W_REQ, Counters, PacketBatch,
+    SwitchState, empty_batch, init_switch_state,
+)
+from repro.kvstore.store import synth_value
+
+PAD = 64
+
+
+def _seed_switch_step(sw, pkts, recirc_packets, max_serves):
+    """Verbatim seed implementation (pre kernel dispatch)."""
+    op, valid = pkts.op, pkts.valid
+    cidx = lk.lookup(sw.lookup, pkts.hkey)
+    hit = (cidx >= 0) & valid
+    safe_cidx = jnp.where(hit, cidx, 0)
+
+    r_req = valid & (op == swm.OP_R_REQ)
+    w_req = valid & (op == swm.OP_W_REQ)
+    r_rep = valid & (op == swm.OP_R_REP)
+    w_rep = valid & (op == swm.OP_W_REP)
+    f_rep = valid & (op == swm.OP_F_REP)
+    f_req = valid & (op == swm.OP_F_REQ)
+    crn = valid & (op == swm.OP_CRN_REQ)
+
+    r_hit = r_req & hit
+    entry_valid = sw.state.valid[safe_cidx] & hit
+    want_enq = r_hit & entry_valid
+    enq = rt.enqueue(
+        sw.reqtab, cidx, want_enq, pkts.client, pkts.seq, pkts.port, pkts.ts,
+        kidx=pkts.kidx,
+    )
+    invalid_fwd = r_hit & ~entry_valid
+
+    c_entries = sw.counters.popularity.shape[0]
+    pop_idx = jnp.where(r_hit, cidx, c_entries)
+    popularity = sw.counters.popularity.at[pop_idx].add(1, mode='drop')
+    n_hit = jnp.sum(r_hit.astype(jnp.int32))
+    n_overflow = jnp.sum(enq.overflow.astype(jnp.int32))
+    n_invalid_fwd = jnp.sum(invalid_fwd.astype(jnp.int32))
+
+    w_cached = w_req & hit
+    state2 = stt.invalidate(sw.state, safe_cidx, w_cached)
+    flag_out = jnp.where(w_cached, jnp.int32(1), pkts.flag)
+
+    install = (w_rep | f_rep) & hit & (pkts.flag >= 1)
+    state3 = stt.validate(state2, safe_cidx, install)
+    inst_version = state3.version[safe_cidx]
+    frag = jnp.where(f_rep, pkts.seq, 0)
+    orbit2 = ob.install_lines(
+        sw.orbit, safe_cidx, install, pkts.kidx, inst_version,
+        pkts.vlen, pkts.val, frag=frag, n_frags=jnp.maximum(pkts.flag, 1),
+    )
+
+    counters = Counters(
+        popularity=popularity,
+        hits=sw.counters.hits + n_hit,
+        overflow=sw.counters.overflow + n_overflow + n_invalid_fwd,
+        cached_reqs=sw.counters.cached_reqs + n_hit,
+    )
+    sw2 = SwitchState(
+        lookup=sw.lookup, state=state3, reqtab=enq.table, orbit=orbit2,
+        counters=counters,
+    )
+
+    sw3, grid = ob.orbit_pass(sw2, recirc_packets, max_serves)
+    n_served = jnp.sum(grid.served.astype(jnp.int32))
+    bytes_served = jnp.sum(
+        jnp.where(grid.served, grid.vlen[:, None], 0)).astype(jnp.int32)
+
+    route = jnp.full(pkts.width, swm.ROUTE_DROP, jnp.int32)
+    to_server = (
+        (r_req & ~hit) | enq.overflow | invalid_fwd | w_req | crn | f_req
+    )
+    to_client = r_rep | (w_rep & ~install) | (w_rep & install)
+    route = jnp.where(to_server & valid, swm.ROUTE_SERVER, route)
+    route = jnp.where(to_client & valid, swm.ROUTE_CLIENT, route)
+
+    stats = swm.StepStats(
+        n_r_req=jnp.sum(r_req.astype(jnp.int32)),
+        n_hit=n_hit,
+        n_enq=jnp.sum(enq.accepted.astype(jnp.int32)),
+        n_overflow=n_overflow,
+        n_invalid_fwd=n_invalid_fwd,
+        n_w_req=jnp.sum(w_req.astype(jnp.int32)),
+        n_w_cached=jnp.sum(w_cached.astype(jnp.int32)),
+        n_install=jnp.sum(install.astype(jnp.int32)),
+        n_served=n_served,
+        bytes_served=bytes_served,
+        n_crn=jnp.sum(crn.astype(jnp.int32)),
+    )
+    return sw3, swm.StepOutput(route=route, flag=flag_out, grid=grid,
+                               stats=stats)
+
+
+def _boot(keys=(0, 1, 2, 3), entries=8):
+    sw = init_switch_state(entries, queue_size=4, value_pad=PAD)
+    ctrl = CacheController(ControllerConfig(active_size=entries))
+    sw, fetches = ctrl.preload(sw, np.asarray(keys, np.int32))
+    ks = jnp.asarray([k for k, _ in fetches], jnp.int32)
+    vals = synth_value(ks, jnp.zeros_like(ks), PAD)
+    n = len(fetches)
+    pk = empty_batch(max(n, 8), value_pad=PAD)
+    pk = pk._replace(
+        op=pk.op.at[:n].set(OP_F_REP),
+        kidx=pk.kidx.at[:n].set(ks),
+        hkey=pk.hkey.at[:n].set(hash128_u32(ks)),
+        flag=pk.flag.at[:n].set(1),
+        val=pk.val.at[:n].set(vals),
+        vlen=pk.vlen.at[:n].set(32),
+        valid=pk.valid.at[:n].set(True),
+    )
+    return sw, pk
+
+
+def _traffic(rng: np.random.Generator, b=24):
+    """Mixed-op batch: hits, misses, writes, installs, CRN, dead lanes."""
+    ops = rng.choice(
+        [OP_R_REQ, OP_R_REQ, OP_R_REQ, OP_W_REQ, OP_W_REP, OP_F_REP,
+         OP_CRN_REQ], size=b).astype(np.int32)
+    kidx = rng.choice([0, 1, 2, 3, 7, 99, 1234], size=b).astype(np.int32)
+    flags = rng.integers(0, 2, b).astype(np.int32)
+    valid = rng.random(b) < 0.85
+    k = jnp.asarray(kidx)
+    pk = empty_batch(b, value_pad=PAD)
+    return pk._replace(
+        op=jnp.asarray(ops),
+        kidx=k,
+        hkey=hash128_u32(k),
+        flag=jnp.asarray(flags),
+        seq=jnp.arange(b, dtype=jnp.int32),
+        client=jnp.arange(b, dtype=jnp.int32) % 4,
+        vlen=jnp.full(b, 32, jnp.int32),
+        val=synth_value(k, jnp.zeros_like(k), PAD),
+        valid=jnp.asarray(valid),
+        ts=jnp.arange(b, dtype=jnp.float32),
+    )
+
+
+def _assert_trees_equal(a, b, label):
+    fa = jax.tree_util.tree_leaves_with_path(a)
+    fb = jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for (path, la), lb in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{label}: mismatch at {jax.tree_util.keystr(path)}")
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_switch_step_bit_identical_to_seed(backend):
+    kn.set_kernel_backend(backend)
+    try:
+        rng = np.random.default_rng(0)
+        sw_new, pk0 = _boot()
+        sw_old = sw_new
+        # boot step itself must agree
+        sw_new, out_new = swm.switch_step(sw_new, pk0, jnp.int32(100), 4)
+        sw_old, out_old = _seed_switch_step(sw_old, pk0, jnp.int32(100), 4)
+        _assert_trees_equal(out_new, out_old, "boot StepOutput")
+        _assert_trees_equal(sw_new, sw_old, "boot SwitchState")
+        for step in range(6):
+            pk = _traffic(rng)
+            budget = jnp.int32([100, 3, 0, 100, 7, 100][step])
+            sw_new, out_new = swm.switch_step(sw_new, pk, budget, 4)
+            sw_old, out_old = _seed_switch_step(sw_old, pk, budget, 4)
+            _assert_trees_equal(out_new, out_old, f"step {step} StepOutput")
+            _assert_trees_equal(sw_new, sw_old, f"step {step} SwitchState")
+    finally:
+        kn.set_kernel_backend(None)
