@@ -11,8 +11,10 @@ reported separately).  Because shared CI/container hosts drift on ~10 s
 timescales, the two paths are measured in interleaved pairs and the
 headline speedup is the **median of per-pair ratios** — each pair is
 adjacent in time, so slow host drift cancels.  Results land in
-``BENCH_simulator.json`` at the repo root so later PRs have a perf
-trajectory to regress against.
+``BENCH_simulator.json`` at the repo root: each run (stamped with host,
+git revision, timestamp) is **appended** to the ``history`` list and
+mirrored in ``latest``, so the perf trajectory survives across PRs —
+regress against the history before touching the hot path.
 
 Run: ``PYTHONPATH=src python -m benchmarks.perf_smoke``
 """
@@ -24,6 +26,7 @@ import json
 import os
 import platform
 import statistics
+import subprocess
 import sys
 import time
 
@@ -48,6 +51,36 @@ SMOKE_CFG = RackConfig(
     subrounds=2,
 )
 SMOKE_KEYS = 10_000
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def append_history(out_path: str, run: dict) -> dict:
+    """Append ``run`` to the bench file's history (legacy single-run files
+    become the first history entry) and mirror it as ``latest``."""
+    data = {"bench": "rack_simulator_smoke", "history": []}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = None
+        if isinstance(old, dict):
+            if isinstance(old.get("history"), list):
+                data["history"] = old["history"]
+            elif "serial" in old:   # pre-history format: one run at top level
+                data["history"] = [old]
+    data["history"].append(run)
+    data["latest"] = run
+    return data
 
 
 def main() -> None:
@@ -111,7 +144,8 @@ def main() -> None:
     print(f"speedup,{speedup:.2f},median of per-pair ratios", flush=True)
 
     result = {
-        "bench": "rack_simulator_smoke",
+        "host": platform.node(),
+        "git_rev": _git_rev(),
         "config": {
             "points": n, "windows": w, "reps": args.reps,
             "num_keys": SMOKE_KEYS,
@@ -140,9 +174,11 @@ def main() -> None:
         "speedup_windows_per_s": speedup,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
+    data = append_history(args.out, result)
     with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
-    print(f"# wrote {args.out}", flush=True)
+        json.dump(data, f, indent=1)
+    print(f"# wrote {args.out} ({len(data['history'])} runs in history)",
+          flush=True)
 
 
 if __name__ == "__main__":

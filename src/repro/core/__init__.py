@@ -5,7 +5,8 @@ Layout mirrors the paper's switch architecture (Fig. 2):
   state_table     value validity + coherence versions
   request_table   circular-queue request metadata buffers
   orbit           circulating cache packets (recirculation + cloning)
-  switch          the composed data plane (one jitted step)
+  pipeline        the unified fused data plane (kernel-backed subround pass)
+  switch          thin single-batch wrapper over the pipeline
   sketch          count-min sketch / top-k server reports
   controller      control-plane cache updates + dynamic sizing
   distributed     shard_map multi-device orbit ring (TPU-native recirculation)
@@ -14,8 +15,12 @@ from .types import (  # noqa: F401
     OP_R_REQ, OP_W_REQ, OP_R_REP, OP_W_REP, OP_F_REQ, OP_F_REP, OP_CRN_REQ,
     OP_NONE, ROUTE_DROP, ROUTE_SERVER, ROUTE_CLIENT, HKEY_LANES,
     PacketBatch, LookupTable, StateTable, RequestTable, OrbitBuffer,
-    Counters, SwitchState, empty_batch, init_switch_state,
+    OrbitMeta, Counters, SwitchState, empty_batch, init_switch_state,
 )
 from .hashing import hash128_u32, hash128_u32_np, hash128_bytes_np, server_of_key  # noqa: F401
+from .pipeline import (  # noqa: F401
+    PipelineCarry, SubroundOut, subround_pipeline, switch_pipeline,
+    window_pipeline,
+)
 from .switch import switch_step, StepOutput, StepStats  # noqa: F401
 from .controller import CacheController, ControllerConfig  # noqa: F401

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import axis_size_compat
+
 from . import lookup as lk
 from . import request_table as rt
 from .types import (
@@ -85,6 +87,7 @@ def init_ring_state(
             port=jnp.zeros((c * s,), jnp.int32),
             ts=jnp.zeros((c * s,), jnp.float32),
             acked=jnp.zeros((c * s,), jnp.int32),
+            kidx=jnp.full((c * s,), -1, jnp.int32),
             qlen=jnp.zeros((c,), jnp.int32),
             front=jnp.zeros((c,), jnp.int32),
             rear=jnp.zeros((c,), jnp.int32),
@@ -190,7 +193,7 @@ def ring_step(
     ax = axis_name if isinstance(axis_name, tuple) else (axis_name,)
     d = 1
     for a in ax:
-        d *= jax.lax.axis_size(a)
+        d *= axis_size_compat(a)
     perm = [(i, (i + 1) % d) for i in range(d)]
     rotated = jax.tree.map(
         lambda x: jax.lax.ppermute(x, ax if len(ax) > 1 else ax[0], perm), sl
@@ -252,8 +255,8 @@ def make_ring_step(mesh, axis_names, clones_per_visit: int = 4):
     state_specs = RingState(
         lookup=LookupTable(hkeys=P(), occupied=P(), kidx=P()),
         state=StateTable(valid=P(), version=P()),
-        reqtab=RequestTable(*([ring_spec] * 8)),
-        slice=OrbitSlice(*([ring_spec] * 6)),
+        reqtab=RequestTable(*([ring_spec] * len(RequestTable._fields))),
+        slice=OrbitSlice(*([ring_spec] * len(OrbitSlice._fields))),
         popularity=ring_spec,
         overflow=ring_spec,
         hits=ring_spec,
@@ -264,12 +267,12 @@ def make_ring_step(mesh, axis_names, clones_per_visit: int = 4):
     # shard_map hands each device its *block* with the sharded (ring) axis
     # still present as a leading dim of size 1; squeeze/unsqueeze around the
     # per-device core step.
-    @partial(
-        jax.shard_map,
+    from repro.parallel.sharding import shard_map_compat
+
+    @shard_map_compat(
         mesh=mesh,
         in_specs=(state_specs, pkt_spec),
         out_specs=(state_specs, serve_specs),
-        check_vma=False,
     )
     def step2(st: RingState, pkts: PacketBatch):
         def squeeze(spec, x):

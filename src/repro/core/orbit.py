@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from . import request_table as rt
 from .scatter_free import last_writer
-from .types import OrbitBuffer, SwitchState
+from .types import OrbitBuffer, OrbitMeta, SwitchState
 
 
 class ServeGrid(NamedTuple):
@@ -120,6 +120,39 @@ def install_lines(
     The switch "clones" the reply: the original goes to the client (handled
     by the caller's routing) and the clone becomes the orbit line — here the
     clone is a functional scatter into the orbit buffer.
+
+    Thin wrapper over :func:`install_lines_meta` + the value-byte apply;
+    the fused pipeline calls the meta form and defers the bytes to one
+    install per window.
+    """
+    meta, writer, written = install_lines_meta(
+        OrbitMeta(live=orbit.live, kidx=orbit.kidx, version=orbit.version,
+                  vlen=orbit.vlen, frags=orbit.frags),
+        cidx, mask, kidx, version, vlen, frag=frag, n_frags=n_frags,
+    )
+    return OrbitBuffer(
+        live=meta.live, kidx=meta.kidx, version=meta.version, vlen=meta.vlen,
+        val=jnp.where(written[:, None], val[writer], orbit.val),
+        frags=meta.frags,
+    )
+
+
+def install_lines_meta(
+    orbit: OrbitMeta,
+    cidx: jnp.ndarray,
+    mask: jnp.ndarray,
+    kidx: jnp.ndarray,
+    version: jnp.ndarray,
+    vlen: jnp.ndarray,
+    frag: jnp.ndarray | None = None,
+    n_frags: jnp.ndarray | None = None,
+) -> tuple[OrbitMeta, jnp.ndarray, jnp.ndarray]:
+    """Metadata half of an orbit-line install.
+
+    Returns ``(meta', writer int32[C*F], written bool[C*F])`` — the winner
+    reduction is surfaced so the caller can apply the value bytes later
+    (once per window in the fused pipeline, immediately in the
+    :func:`install_lines` wrapper).
     """
     c = orbit.frags.shape[0]
     f = orbit.max_frags
@@ -134,15 +167,15 @@ def install_lines(
     writer, written = last_writer(line, mask, c * f)            # [C*F]
     ent_writer, ent_written = last_writer(cidx, mask & (frag == 0), c)  # [C]
     pick = lambda arr, src: jnp.where(written, src[writer], arr)
-    return OrbitBuffer(
+    meta = OrbitMeta(
         live=orbit.live | written,
         kidx=pick(orbit.kidx, kidx),
         version=pick(orbit.version, version),
         vlen=pick(orbit.vlen, vlen),
-        val=jnp.where(written[:, None], val[writer], orbit.val),
         frags=jnp.where(ent_written, jnp.maximum(n_frags, 1)[ent_writer],
                         orbit.frags),
     )
+    return meta, writer, written
 
 
 def evict_lines(orbit: OrbitBuffer, cidx: jnp.ndarray) -> OrbitBuffer:

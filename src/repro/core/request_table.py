@@ -59,11 +59,34 @@ def enqueue(
     # packets hit *distinct* slots (per-key offsets are consecutive), so a
     # slot's writer is unique.
     writer, written = unique_writer(flat, accepted, c_entries * s)
+    new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
+    table2 = apply_winners(table, writer, written, new_counts,
+                           client, seq, port, ts, kidx=kidx)
+    return EnqueueResult(table2, accepted, overflow)
+
+
+def apply_winners(
+    table: RequestTable,
+    writer: jnp.ndarray,      # int32[C * S] winning lane per slot
+    written: jnp.ndarray,     # bool[C * S]  slot written this batch
+    new_counts: jnp.ndarray,  # int32[C]     accepted enqueues per entry
+    client: jnp.ndarray,
+    seq: jnp.ndarray,
+    port: jnp.ndarray,
+    ts: jnp.ndarray,
+    kidx: jnp.ndarray | None = None,
+) -> RequestTable:
+    """Apply a kernel-computed unique-writer admission pass.
+
+    The fused ``kernels.orbit_pipeline`` op performs :func:`enqueue`'s
+    match + offset + winner reduction inside the switch kernel; this
+    function is the remaining metadata gather + pointer bump.  ``enqueue``
+    stays as the free-standing oracle (unit tests, kernel parity).
+    """
+    s = table.queue_size
     def put(arr, val):
         return jnp.where(written, val[writer], arr)
-
-    new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
-    table2 = RequestTable(
+    return RequestTable(
         client=put(table.client, client),
         seq=put(table.seq, seq),
         port=put(table.port, port),
@@ -74,7 +97,6 @@ def enqueue(
         front=table.front,
         rear=(table.rear + new_counts) % s,
     )
-    return EnqueueResult(table2, accepted, overflow)
 
 
 class DequeueResult(NamedTuple):

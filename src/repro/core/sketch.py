@@ -128,6 +128,26 @@ def track(tr: PopularityTracker, kidx: jnp.ndarray, mask: jnp.ndarray,
     return PopularityTracker(cms, cand)
 
 
+def track_fused(tr: PopularityTracker, kidx: jnp.ndarray, mask: jnp.ndarray,
+                ) -> PopularityTracker:
+    """:func:`track` through the fused ``kernels.cms_update_query`` op.
+
+    Both the switch and server sketches then share one kernel path.  The
+    sketch counters update bit-identically to :func:`track`; the estimates
+    feeding the candidate table are the kernel's tile-ordered ones (each
+    batch tile queries the sketch as of the tile start rather than after
+    the full batch update), which at most understates a key's count by its
+    arrivals inside the same batch — recall is regression-tested.
+    """
+    from repro import kernels as kn
+
+    hkey = hash128_u32(kidx)
+    counts, est = kn.cms_update_query(
+        hkey, jnp.asarray(mask, jnp.int32), tr.cms.counts)
+    cand = merge_candidates_hashed(tr.cand, kidx, est, mask)
+    return PopularityTracker(CountMinSketch(counts), cand)
+
+
 def report_and_reset(tr: PopularityTracker, k: int,
                      ) -> tuple[PopularityTracker, jnp.ndarray, jnp.ndarray]:
     """Top-k report for the controller; counters reset (paper §3.8)."""

@@ -35,3 +35,21 @@ def validate(st: StateTable, cidx: jnp.ndarray, mask: jnp.ndarray) -> StateTable
     """Re-validate entries on write/fetch replies carrying fresh values."""
     oh = _onehot(cidx, mask, st.valid.shape[0])
     return st._replace(valid=st.valid | jnp.any(oh, axis=0))
+
+
+def apply_batch(st: StateTable, cidx: jnp.ndarray, inval_mask: jnp.ndarray,
+                valid_mask: jnp.ndarray) -> StateTable:
+    """One fused pass: write invalidations then reply validations.
+
+    Bit-identical to ``validate(invalidate(st, cidx, inval_mask), cidx,
+    valid_mask)`` — the two one-hot matrices are built from the same
+    ``cidx`` gather and reduced together (the pipeline's single-pass form).
+    """
+    c = st.valid.shape[0]
+    oh_inv = _onehot(cidx, inval_mask, c)
+    oh_val = _onehot(cidx, valid_mask, c)
+    bump = jnp.sum(oh_inv.astype(jnp.int32), axis=0)
+    return StateTable(
+        valid=(st.valid & ~jnp.any(oh_inv, axis=0)) | jnp.any(oh_val, axis=0),
+        version=st.version + bump,
+    )

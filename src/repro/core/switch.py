@@ -18,19 +18,18 @@ serving round, mirroring the paper's per-packet logic exactly:
 Orbit lines never appear in the ingress batch: recirculation is internal
 (the OrbitBuffer), so "check whether the ingress port is the recirculation
 port" is structural here.
+
+The implementation lives in :mod:`repro.core.pipeline` — the whole pass is
+one fused ``kernels.orbit_pipeline`` op plus scatter-free appliers, scanned
+per subround by production callers.  ``switch_step`` is the thin
+single-batch wrapper kept for unit tests and examples.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax.numpy as jnp
 
-from repro import kernels as kn
-
-from . import orbit as ob
-from . import request_table as rt
-from . import state_table as stt
-from .types import (
+from .pipeline import StepOutput, StepStats, switch_pipeline
+from .types import (  # noqa: F401  (re-exported for tests/examples)
     OP_CRN_REQ,
     OP_F_REP,
     OP_F_REQ,
@@ -41,31 +40,11 @@ from .types import (
     ROUTE_CLIENT,
     ROUTE_DROP,
     ROUTE_SERVER,
-    Counters,
     PacketBatch,
     SwitchState,
 )
 
-
-class StepStats(NamedTuple):
-    n_r_req: jnp.ndarray       # read requests seen
-    n_hit: jnp.ndarray         # cache lookup hits (R-REQ)
-    n_enq: jnp.ndarray         # requests buffered in the request table
-    n_overflow: jnp.ndarray    # hit but queue full -> server
-    n_invalid_fwd: jnp.ndarray # hit but value invalid -> server
-    n_w_req: jnp.ndarray       # write requests
-    n_w_cached: jnp.ndarray    # writes to cached keys (invalidations)
-    n_install: jnp.ndarray     # orbit lines installed (W-REP/F-REP)
-    n_served: jnp.ndarray      # requests served by orbit lines
-    bytes_served: jnp.ndarray  # value bytes served from orbit
-    n_crn: jnp.ndarray         # correction requests (collision resolution)
-
-
-class StepOutput(NamedTuple):
-    route: jnp.ndarray     # int32[B] ROUTE_* per ingress packet
-    flag: jnp.ndarray      # int32[B] possibly updated FLAG field
-    grid: ob.ServeGrid     # orbit-served replies this round
-    stats: StepStats
+__all__ = ["StepOutput", "StepStats", "switch_step"]
 
 
 def switch_step(
@@ -75,98 +54,4 @@ def switch_step(
     max_serves: int,
 ) -> tuple[SwitchState, StepOutput]:
     """Process one ingress batch + one orbit serving round."""
-    op, valid = pkts.op, pkts.valid
-
-    r_req = valid & (op == OP_R_REQ)
-    w_req = valid & (op == OP_W_REQ)
-    r_rep = valid & (op == OP_R_REP)
-    w_rep = valid & (op == OP_W_REP)
-    f_rep = valid & (op == OP_F_REP)
-    f_req = valid & (op == OP_F_REQ)
-    crn = valid & (op == OP_CRN_REQ)
-
-    # Fused match-action lookup (kernel dispatch: Pallas on TPU, jnp oracle
-    # elsewhere): 128-bit exact-match + validity filter + per-entry
-    # popularity accumulation over valid R-REQ lanes, one pass.
-    cidx, khit, kvhit, pop_delta = kn.orbit_match(
-        pkts.hkey, sw.lookup.hkeys,
-        sw.lookup.occupied.astype(jnp.int32),
-        sw.state.valid.astype(jnp.int32),
-        pop_mask=r_req.astype(jnp.int32),
-    )
-    hit = (khit > 0) & valid
-    safe_cidx = jnp.where(hit, cidx, 0)
-
-    # ---- read requests (Fig. 4a) -----------------------------------------
-    r_hit = r_req & hit
-    entry_valid = (kvhit > 0) & valid
-    want_enq = r_hit & entry_valid
-    enq = rt.enqueue(
-        sw.reqtab, cidx, want_enq, pkts.client, pkts.seq, pkts.port, pkts.ts,
-        kidx=pkts.kidx,
-    )
-    invalid_fwd = r_hit & ~entry_valid
-
-    # key counters (paper §3.1: popularity per key, hits, overflow)
-    popularity = sw.counters.popularity + pop_delta
-    n_hit = jnp.sum(r_hit.astype(jnp.int32))
-    n_overflow = jnp.sum(enq.overflow.astype(jnp.int32))
-    n_invalid_fwd = jnp.sum(invalid_fwd.astype(jnp.int32))
-
-    # ---- write requests (Fig. 4c) ----------------------------------------
-    w_cached = w_req & hit
-    state2 = stt.invalidate(sw.state, safe_cidx, w_cached)
-    flag_out = jnp.where(w_cached, jnp.int32(1), pkts.flag)
-
-    # ---- write / fetch replies (Fig. 4d) ----------------------------------
-    install = (w_rep | f_rep) & hit & (pkts.flag >= 1)
-    state3 = stt.validate(state2, safe_cidx, install)
-    # Version at install time: current version (post any same-batch
-    # invalidations) so the fresh line is immediately current.
-    inst_version = state3.version[safe_cidx]
-    frag = jnp.where(f_rep, pkts.seq, 0)  # F-REP: seq carries fragment number
-    orbit2 = ob.install_lines(
-        sw.orbit, safe_cidx, install, pkts.kidx, inst_version,
-        pkts.vlen, pkts.val, frag=frag, n_frags=jnp.maximum(pkts.flag, 1),
-    )
-
-    counters = Counters(
-        popularity=popularity,
-        hits=sw.counters.hits + n_hit,
-        overflow=sw.counters.overflow + n_overflow + n_invalid_fwd,
-        cached_reqs=sw.counters.cached_reqs + n_hit,
-    )
-    sw2 = SwitchState(
-        lookup=sw.lookup, state=state3, reqtab=enq.table, orbit=orbit2,
-        counters=counters,
-    )
-
-    # ---- orbit serving round (Fig. 4b) ------------------------------------
-    sw3, grid = ob.orbit_pass(sw2, recirc_packets, max_serves)
-    n_served = jnp.sum(grid.served.astype(jnp.int32))
-    bytes_served = jnp.sum(jnp.where(grid.served, grid.vlen[:, None], 0)).astype(jnp.int32)
-
-    # ---- routing ----------------------------------------------------------
-    route = jnp.full(pkts.width, ROUTE_DROP, jnp.int32)
-    to_server = (
-        (r_req & ~hit) | enq.overflow | invalid_fwd | w_req | crn | f_req
-    )
-    to_client = r_rep | (w_rep & ~install) | (w_rep & install)
-    route = jnp.where(to_server & valid, ROUTE_SERVER, route)
-    route = jnp.where(to_client & valid, ROUTE_CLIENT, route)
-    # accepted R-REQs and F-REPs are absorbed by the switch (ROUTE_DROP)
-
-    stats = StepStats(
-        n_r_req=jnp.sum(r_req.astype(jnp.int32)),
-        n_hit=n_hit,
-        n_enq=jnp.sum(enq.accepted.astype(jnp.int32)),
-        n_overflow=n_overflow,
-        n_invalid_fwd=n_invalid_fwd,
-        n_w_req=jnp.sum(w_req.astype(jnp.int32)),
-        n_w_cached=jnp.sum(w_cached.astype(jnp.int32)),
-        n_install=jnp.sum(install.astype(jnp.int32)),
-        n_served=n_served,
-        bytes_served=bytes_served,
-        n_crn=jnp.sum(crn.astype(jnp.int32)),
-    )
-    return sw3, StepOutput(route=route, flag=flag_out, grid=grid, stats=stats)
+    return switch_pipeline(sw, pkts, recirc_packets, max_serves)

@@ -163,6 +163,26 @@ class OrbitBuffer(NamedTuple):
         return self.live.shape[0] // self.frags.shape[0]
 
 
+class OrbitMeta(NamedTuple):
+    """Orbit-line metadata without the value payload.
+
+    The serve path reads only vlen/kidx/version/liveness — value bytes are
+    never touched inside a window — so the per-subround pipeline carries
+    this slim view and the ``val`` buffer installs once per window
+    (``repro.core.pipeline``).  Field layout mirrors :class:`OrbitBuffer`.
+    """
+
+    live: jnp.ndarray      # bool[C * F]
+    kidx: jnp.ndarray      # int32[C * F]
+    version: jnp.ndarray   # int32[C * F]
+    vlen: jnp.ndarray      # int32[C * F]
+    frags: jnp.ndarray     # int32[C]
+
+    @property
+    def max_frags(self) -> int:
+        return self.live.shape[0] // self.frags.shape[0]
+
+
 class Counters(NamedTuple):
     """Key counters (paper §3.1): popularity per key + global hit/overflow."""
 

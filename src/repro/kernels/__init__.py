@@ -13,9 +13,9 @@ update/query) are formulated as 128-aligned one-hot contractions, and
 
 Backend dispatch
 ----------------
-The simulator hot path calls the dispatchers below (``orbit_match``,
-``cms_update_query``, ``hot_gather``) instead of picking a kernel variant
-by hand.  The backend is resolved once per trace:
+The simulator hot path calls the dispatchers below (``orbit_pipeline``,
+``orbit_match``, ``cms_update_query``, ``hot_gather``) instead of picking
+a kernel variant by hand.  The backend is resolved once per trace:
 
   * ``pallas``     compiled Pallas kernels (the TPU hot path),
   * ``interpret``  Pallas kernels under the interpreter (debugging,
@@ -38,9 +38,10 @@ import jax.numpy as jnp
 # Python binds a submodule as a parent-package attribute at first import, so
 # importing them eagerly here guarantees the dispatcher functions (defined
 # afterwards) permanently shadow the subpackage attributes.
-from . import cms as _cms_pkg                  # noqa: F401, E402
-from . import hot_gather as _hot_gather_pkg    # noqa: F401, E402
-from . import orbit_match as _orbit_match_pkg  # noqa: F401, E402
+from . import cms as _cms_pkg                      # noqa: F401, E402
+from . import hot_gather as _hot_gather_pkg        # noqa: F401, E402
+from . import orbit_match as _orbit_match_pkg      # noqa: F401, E402
+from . import orbit_pipeline as _orbit_pipe_pkg    # noqa: F401, E402
 
 KERNEL_BACKENDS = ("pallas", "interpret", "ref")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -89,14 +90,39 @@ def orbit_match(hkey, table_hkeys, occupied, valid, pop_mask=None,
                block_b=block_b, interpret=(be == "interpret"))
 
 
+def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
+                   queue_size: int, block_b: int = 128):
+    """Fused match + request-table admission: the whole per-packet ingress
+    decision of the switch data plane in one VMEM-resident pass.
+
+    Superset of ``orbit_match``: 128-bit exact-match, validity filter and
+    popularity accumulation over the ``want_mask`` lanes, PLUS request-table
+    admission for those lanes (arrival offsets against ``qlen``/``rear``,
+    acceptance, and the unique-writer reduction over the C*S slots).
+
+    Returns (cidx [B], hit [B], valid_hit [B], pop [C], accepted bool[B],
+    overflow bool[B], new_counts [C], writer int32[C*S], written bool[C*S]).
+    """
+    be = kernel_backend()
+    if be == "ref":
+        from .orbit_pipeline.ref import orbit_pipeline_ref
+        return orbit_pipeline_ref(hkey, table_hkeys, occupied, valid,
+                                  want_mask, qlen, rear, queue_size)
+    from .orbit_pipeline.ops import orbit_pipeline as _op
+    return _op(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
+               queue_size, block_b=block_b, interpret=(be == "interpret"))
+
+
 def cms_update_query(hkey, mask, counts, block_b: int = 256):
     """Fused count-min sketch update+query on the active backend."""
     be = kernel_backend()
     if be == "ref":
         # replay the kernel's tile order exactly (estimates are taken
-        # against the sketch state at the start of each batch tile)
+        # against the sketch state at the start of each batch tile), in the
+        # O(B * DEPTH) scatter/gather form — bit-identical to the one-hot
+        # oracle, cheap enough for the per-window server tracker.
         from .cms.ops import rows_for
-        from .cms.ref import cms_update_query_ref
+        from .cms.ref import cms_update_query_fast
         b = hkey.shape[0]
         idx = rows_for(hkey, counts.shape[1])
         msk = jnp.asarray(mask, jnp.int32)
@@ -105,7 +131,7 @@ def cms_update_query(hkey, mask, counts, block_b: int = 256):
         if pad:
             idx = jnp.pad(idx, ((0, pad), (0, 0)))
             msk = jnp.pad(msk, (0, pad))
-        new_counts, est = cms_update_query_ref(idx, msk, counts, block_b=tile)
+        new_counts, est = cms_update_query_fast(idx, msk, counts, block_b=tile)
         return new_counts, est[:b]
     from .cms.ops import cms_update_query as _cms
     return _cms(hkey, mask, counts, block_b=block_b,

@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for orbit_pipeline (fused match + request-table admission).
+
+This is the composition of ``orbit_match_ref`` with the one-hot winner pass
+of ``repro.core.request_table.enqueue``, expressed as one function so the
+Pallas kernel has a single oracle to match bit-for-bit:
+
+  * 128-bit exact match against the installed entries + validity filter +
+    gated popularity accumulation (identical to orbit_match_ref);
+  * enqueue admission for the lanes in ``want_mask & hit & valid_hit``:
+    per-entry arrival offsets (exclusive running count of same-entry
+    attempts), acceptance against the free space *at call time*, and the
+    unique-writer reduction over the C*S request-table slots.
+
+``want_mask`` gates both popularity and admission: the switch enqueues
+exactly the valid R-REQ lanes it counts (paper Fig. 4a).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def orbit_pipeline_ref(hkey, table_hkeys, occupied, valid, want_mask,
+                       qlen, rear, queue_size: int):
+    """Fused lookup + admission oracle.
+
+    Args:
+      hkey: uint32[B, 4] request key hashes.
+      table_hkeys: uint32[C, 4]; occupied / valid: int32[C] entry flags.
+      want_mask: int32[B] — valid R-REQ lanes (popularity + enqueue gate).
+      qlen / rear: int32[C] request-table queue state at call time.
+      queue_size: static S (slots per entry).
+
+    Returns (cidx [B], hit [B], valid_hit [B], pop [C], accepted [B],
+    overflow [B], new_counts [C], writer [C*S], written [C*S]).
+    """
+    c = table_hkeys.shape[0]
+    s = queue_size
+
+    # ---- match (identical math to orbit_match_ref) ------------------------
+    eq = jnp.all(hkey[:, None, :] == table_hkeys[None, :, :], axis=-1)
+    eq = eq & (occupied[None, :] > 0)
+    hit = jnp.any(eq, axis=1)
+    cidx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    safe = jnp.where(hit, cidx, 0)
+    entry_valid = (valid[safe] > 0) & hit
+    pop_eq = eq & (want_mask[:, None] > 0)
+    pop = jnp.sum(pop_eq.astype(jnp.int32), axis=0)
+
+    # ---- admission (identical math to request_table.enqueue) --------------
+    want = (want_mask > 0) & hit & entry_valid
+    onehot = (safe[:, None] == jnp.arange(c)[None, :]) & want[:, None]
+    prior = jnp.cumsum(onehot, axis=0) - onehot  # exclusive
+    offset = jnp.take_along_axis(prior, safe[:, None], axis=1)[:, 0]
+    free = s - qlen
+    accepted = want & (offset < free[safe])
+    overflow = want & ~accepted
+    new_counts = jnp.sum(onehot & accepted[:, None], axis=0).astype(jnp.int32)
+
+    slot = (rear[safe] + offset) % s
+    flat = safe * s + slot
+    # unique-writer reduction: accepted lanes hit distinct slots, so any
+    # reduction finds the writer (same form as scatter_free.unique_writer)
+    woh = accepted[:, None] & (flat[:, None] == jnp.arange(c * s)[None, :])
+    writer = jnp.argmax(woh, axis=0).astype(jnp.int32)
+    written = jnp.any(woh, axis=0)
+
+    return (
+        jnp.where(hit, cidx, -1),
+        hit.astype(jnp.int32),
+        entry_valid.astype(jnp.int32),
+        pop,
+        accepted,
+        overflow,
+        new_counts,
+        writer,
+        written,
+    )

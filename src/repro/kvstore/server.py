@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.hashing import hash128_u32
 from repro.core.scatter_free import unique_writer
-from repro.core.sketch import PopularityTracker, init_tracker, track
+from repro.core.sketch import PopularityTracker, init_tracker, track_fused
 from repro.core.types import (
     OP_CRN_REQ,
     OP_F_REQ,
@@ -134,11 +134,13 @@ def server_step(
     )
 
     # ---- popularity tracking on arriving reads (CMS + candidates) ---------
+    # Routed through the fused cms_update_query kernel so the server sketch
+    # shares the switch's kernel path (backend-dispatched like orbit_match).
     if cfg.track_popularity:
         is_read = accepted & (pkts.op == OP_R_REQ)
         per_srv_mask = onehot & is_read[:, None]          # [B, n]
         def _track(tr, mask_col):
-            return track(tr, pkts.kidx, mask_col)
+            return track_fused(tr, pkts.kidx, mask_col)
         st = st._replace(tracker=jax.vmap(_track)(st.tracker, per_srv_mask.T))
 
     # ---- serve up to cap per server ----------------------------------------

@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.baselines.netcache import init_netcache, netcache_install, netcache_step
-from repro.core import switch as swm
+from repro.core import pipeline
 from repro.core.controller import CacheController, ControllerConfig
 from repro.core.hashing import hash128_u32, server_of_key
 from repro.core.types import (
@@ -51,7 +51,6 @@ from repro.core.types import (
     ROUTE_CLIENT,
     ROUTE_SERVER,
     PacketBatch,
-    SwitchState,
     empty_batch,
     init_switch_state,
 )
@@ -61,7 +60,7 @@ from . import client as cl
 from .server import ServerConfig, ServerState, init_servers, server_reports, server_step
 from .workload import Workload, WorkloadArrays
 
-HDR_BYTES = 62  # ethernet+ip+udp+orbitcache header overhead per cache packet
+HDR_BYTES = pipeline.HDR_BYTES  # canonical definition lives with the budget model
 
 
 @dataclass(frozen=True)
@@ -233,24 +232,15 @@ def window_step(
 
     window = jnp.float32(c.window_us)
     if c.scheme == "orbitcache":
-        # recirculation budget in packets per subround: port bandwidth /
-        # mean live line size (header + key + value fragment)
-        def one_subround(sw: SwitchState, pk: PacketBatch):
-            live = sw.orbit.live
-            nlive = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
-            mean_line = (
-                jnp.sum(jnp.where(live, sw.orbit.vlen, 0)) / nlive
-                + HDR_BYTES + key_size
-            )
-            pps = (c.recirc_gbps * 1e9 / 8.0) / mean_line
-            budget = (pps * window * 1e-6 / c.subrounds).astype(jnp.int32)
-            sw2, out = swm.switch_step(sw, pk, budget, c.max_serves)
-            interval_us = nlive.astype(jnp.float32) / pps * 1e6
-            return sw2, (out.route, out.flag, out.grid, out.stats, interval_us)
-
-        policy, (routes, flags, grids, stats, intervals) = jax.lax.scan(
-            one_subround, carry.policy, sub, unroll=c.subrounds
+        # One kernel-backed fused pass per subround; orbit value bytes stay
+        # out of the scan carry and install once per window (core.pipeline).
+        policy, outs, intervals = pipeline.window_pipeline(
+            carry.policy, sub,
+            recirc_gbps=c.recirc_gbps, window_us=c.window_us,
+            subrounds=c.subrounds, max_serves=c.max_serves,
+            key_size=key_size,
         )
+        routes, flags, grids, stats = outs.route, outs.flag, outs.grid, outs.stats
         switch_reply = jnp.zeros((pad_to,), bool)
         # account orbit-served replies (flatten subround dim into C)
         r_idx = jnp.arange(c.subrounds, dtype=jnp.float32)[:, None, None]

@@ -140,6 +140,18 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
     return comps
 
 
+def _operand_names(inst: Instruction) -> list[str]:
+    """Operand ``%name``s from the start of ``rest``.
+
+    Operands carry their full shape blobs (``f32[256,256]{1,0} %dot.0``),
+    so splitting on commas mangles names — cut at the first ``), `` (the
+    operand-list/attribute boundary; shape blobs contain no ``), ``) and
+    pull the ``%``-prefixed identifiers.
+    """
+    region = inst.rest.split("), ")[0]
+    return re.findall(r"%([\w.\-]+)", region)
+
+
 def _dot_flops(inst: Instruction, comp: Computation) -> float:
     out_elems = 1
     dims = _shape_dims(inst.shape_blob)
@@ -147,15 +159,7 @@ def _dot_flops(inst: Instruction, comp: Computation) -> float:
         out_elems *= d
     # contraction size from the lhs operand's shape
     cm = _CONTRACT.search(inst.rest)
-    ops = [o.strip().lstrip("%") for o in inst.rest.split("(")[0].split(",")]
-    # operands are at the start of `rest` up to first ')': parse names
-    m = re.match(r"([^)]*)\)", inst.rest)
-    operand_names = []
-    if m:
-        for tok in m.group(1).split(","):
-            tok = tok.strip().lstrip("%")
-            if tok:
-                operand_names.append(tok)
+    operand_names = _operand_names(inst)
     contraction = 1
     if cm and operand_names:
         lhs_shape = _shape_dims(comp.defs.get(operand_names[0], ""))
@@ -225,13 +229,6 @@ def _collective_wire(kind: str, inst: Instruction, comp: Computation,
     if kind.startswith("collective-permute"):
         return float(out_b)
     return float(out_b)
-
-
-def _operand_names(inst: Instruction) -> list[str]:
-    m = re.match(r"([^)]*)\)", inst.rest)
-    if not m:
-        return []
-    return [t.strip().lstrip("%") for t in m.group(1).split(",") if t.strip()]
 
 
 def _mem_bytes(inst: Instruction, comp: Computation,

@@ -19,6 +19,23 @@ import jax.numpy as jnp
 from .layers import groupnorm_heads, init_groupnorm, init_linear, linear
 
 
+@jax.custom_jvp
+def _barrier(x):
+    """optimization_barrier with a pass-through differentiation rule.
+
+    jax 0.4.x has no JVP rule for ``optimization_barrier`` (training
+    through the sLSTM scan raised NotImplementedError); the barrier is an
+    identity, so the tangent passes straight through while the primal keeps
+    its scheduling fence.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    return _barrier(primals[0]), tangents[0]
+
+
 class MLSTMState(NamedTuple):
     c: jnp.ndarray   # [B, H, dk, dv] matrix memory
     n: jnp.ndarray   # [B, H, dk]
@@ -237,7 +254,7 @@ def slstm_forward(x, p, cfg, state: SLSTMState | None = None,
     # materialize the time-major copy ONCE — without the barrier XLA sinks
     # the transpose into the scan and re-touches the full gates tensor
     # every iteration (§Perf iteration 3)
-    gz = jax.lax.optimization_barrier(gz)
+    gz = _barrier(gz)
 
     def step(carry, gchunk):                                      # [tc,B,4,H,dh]
         hs_c = []

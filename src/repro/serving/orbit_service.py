@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import distributed as ring
 from repro.core.hashing import hash128_u32
 from repro.core.types import OP_R_REQ, PacketBatch
+from repro.parallel.sharding import axis_size_compat
 
 
 class ServiceConfig(NamedTuple):
@@ -83,7 +84,7 @@ def service_step_local(st: ServiceState, keys: jnp.ndarray,
     ax = axis_names if isinstance(axis_names, tuple) else (axis_names,)
     d = 1
     for a in ax:
-        d *= jax.lax.axis_size(a)
+        d *= axis_size_compat(a)
     keys_local = st.store_keys.shape[-1]
     b = keys.shape[0]
 
@@ -152,17 +153,18 @@ def make_service_step(mesh, axis_names, cfg: ServiceConfig):
     rspec = ring.RingState(
         lookup=ring.LookupTable(hkeys=P(), occupied=P(), kidx=P()),
         state=ring.StateTable(valid=P(), version=P()),
-        reqtab=ring.RequestTable(*([spec] * 8)),
-        slice=ring.OrbitSlice(*([spec] * 6)),
+        reqtab=ring.RequestTable(*([spec] * len(ring.RequestTable._fields))),
+        slice=ring.OrbitSlice(*([spec] * len(ring.OrbitSlice._fields))),
         popularity=spec, overflow=spec, hits=spec,
     )
     sspec = ServiceState(ring=rspec, store_vals=spec, store_keys=spec)
-    serve_spec = ring.RingServe(*([spec] * 8))
+    serve_spec = ring.RingServe(*([spec] * len(ring.RingServe._fields)))
 
-    @partial(jax.shard_map, mesh=mesh,
-             in_specs=(sspec, spec, spec),
-             out_specs=(sspec, spec, spec, spec, serve_spec),
-             check_vma=False)
+    from repro.parallel.sharding import shard_map_compat
+
+    @shard_map_compat(mesh=mesh,
+                      in_specs=(sspec, spec, spec),
+                      out_specs=(sspec, spec, spec, spec, serve_spec))
     def step(st: ServiceState, keys, mask):
         sq = lambda t: jax.tree.map(
             lambda s, x: x.reshape(x.shape[1:]) if s == spec else x, t[0], t[1])

@@ -6,10 +6,11 @@ an approximation.
 """
 import dataclasses
 
+import jax
 import numpy as np
 import pytest
 
-from repro.kvstore.fleet import BatchedRackSimulator
+from repro.kvstore.fleet import BatchedRackSimulator, _tree_take
 from repro.kvstore.simulator import RackConfig, RackSimulator
 from repro.kvstore.workload import Workload, WorkloadConfig
 
@@ -46,6 +47,36 @@ def test_batched_points_match_serial(wl, scheme):
             np.testing.assert_array_equal(
                 got[k][i], want[k],
                 err_msg=f"{scheme} point {i} (seed {seed}): trace {k!r}")
+
+
+@pytest.mark.parametrize("scheme", ["orbitcache", "netcache"])
+def test_batched_preload_matches_serial_tables(wl, scheme):
+    """Per-point preload under stacked-leaf sharing builds the *same tables*
+    as preloading each rack serially — checked on the policy state right
+    after preload (not just on end-of-run traces).  The skew sweep stacks
+    the CDF leaf while perm/vlen stay shared, so per-point preload runs
+    against the shared-leaf machinery."""
+    wl2 = Workload(WorkloadConfig(num_keys=20_000, zipf_alpha=0.9,
+                                  offered_rps=2.0e6))
+    cfg = dataclasses.replace(CFG, scheme=scheme)
+    points = [wl, wl2]
+    keys = [w.hottest_keys(64 if scheme == "orbitcache" else 2000)
+            for w in points]
+    bsim = BatchedRackSimulator(cfg, points)
+    assert bsim._wl_axes.cdf == 0 and bsim._wl_axes.perm is None
+    bsim.preload(keys)
+    for i, w in enumerate(points):
+        sim = RackSimulator(dataclasses.replace(cfg, seed=cfg.seed + i), w)
+        sim.preload(np.asarray(keys[i]))
+        want = sim.carry.policy
+        got = _tree_take(bsim.carry.policy, i)
+        for (path, g), want_leaf in zip(
+                jax.tree_util.tree_leaves_with_path(got),
+                jax.tree.leaves(want)):
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(want_leaf),
+                err_msg=f"{scheme} point {i}: policy leaf "
+                        f"{jax.tree_util.keystr(path)}")
 
 
 def test_batched_offered_sweep_orders_load(wl):

@@ -7,11 +7,13 @@ import pytest
 from repro import kernels
 from repro.core.hashing import hash128_u32
 from repro.kernels.cms.ops import cms_update_query, rows_for
-from repro.kernels.cms.ref import cms_update_query_ref
+from repro.kernels.cms.ref import cms_update_query_fast, cms_update_query_ref
 from repro.kernels.hot_gather.ops import hot_gather
 from repro.kernels.hot_gather.ref import hot_gather_ref
 from repro.kernels.orbit_match.ops import orbit_match
 from repro.kernels.orbit_match.ref import orbit_match_ref
+from repro.kernels.orbit_pipeline.ops import orbit_pipeline
+from repro.kernels.orbit_pipeline.ref import orbit_pipeline_ref
 
 RNG = np.random.default_rng(42)
 
@@ -185,6 +187,93 @@ def test_hot_gather_all_misses():
 
 
 # ---------------------------------------------------------------------------
+# orbit_pipeline: fused match + admission
+# ---------------------------------------------------------------------------
+def _pipeline_case(b, c, s, block_b, hot=False):
+    keys = jnp.asarray(RNG.choice(2000, c, replace=False), jnp.int32)
+    table = hash128_u32(keys)
+    if hot:  # hit-heavy: queries drawn from the installed keys
+        occ = jnp.ones(c, jnp.int32)
+        val = jnp.ones(c, jnp.int32)
+        q = jnp.asarray(RNG.choice(np.asarray(keys), b), jnp.int32)
+    else:
+        occ = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+        val = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
+        q = jnp.asarray(RNG.integers(0, 3000, b), jnp.int32)
+    hq = hash128_u32(q)
+    mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+    qlen = jnp.asarray(RNG.integers(0, s + 1, c), jnp.int32)
+    rear = jnp.asarray(RNG.integers(0, s, c), jnp.int32)
+    return hq, table, occ, val, mask, qlen, rear
+
+
+@pytest.mark.parametrize("b,c,s,block,hot", [
+    (24, 8, 4, 8, True),      # multi-tile, hit-heavy (overflows exercised)
+    (300, 16, 8, 64, True),
+    (64, 130, 8, 32, True),   # C > 128 (table pad)
+    (17, 5, 3, 8, False),     # B % block != 0 (batch pad)
+])
+def test_orbit_pipeline_kernel_matches_oracle(b, c, s, block, hot):
+    args = _pipeline_case(b, c, s, block, hot)
+    got = orbit_pipeline(*args, s, block_b=block)
+    want = orbit_pipeline_ref(*args, s)
+    names = ("cidx", "hit", "vhit", "pop", "accepted", "overflow",
+             "new_counts", "writer", "written")
+    for name, g, w in zip(names, got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{name} (b={b}, c={c})")
+
+
+def test_orbit_pipeline_matches_enqueue_composition():
+    """The fused op == orbit_match + request_table.enqueue composed."""
+    from repro.core import request_table as rt
+    from repro.core.types import RequestTable
+
+    b, c, s = 96, 16, 4
+    args = _pipeline_case(b, c, s, 32, hot=True)
+    hq, table, occ, val, mask, qlen, rear = args
+    cidx, hit, vhit, pop, acc, ovf, newc, writer, written = \
+        orbit_pipeline_ref(*args, s)
+    m_cidx, m_hit, m_vhit, m_pop = orbit_match_ref(hq, table, occ, val, mask)
+    np.testing.assert_array_equal(np.asarray(cidx), np.asarray(m_cidx))
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(m_pop))
+
+    tbl = RequestTable(
+        client=jnp.full(c * s, -1, jnp.int32), seq=jnp.zeros(c * s, jnp.int32),
+        port=jnp.zeros(c * s, jnp.int32), ts=jnp.zeros(c * s, jnp.float32),
+        acked=jnp.zeros(c * s, jnp.int32), kidx=jnp.full(c * s, -1, jnp.int32),
+        qlen=qlen, front=jnp.zeros(c, jnp.int32), rear=rear)
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    want_mask = (mask > 0) & (m_hit > 0) & (m_vhit > 0)
+    enq = rt.enqueue(tbl, jnp.where(m_cidx >= 0, m_cidx, 0), want_mask,
+                     lanes, lanes, lanes, lanes.astype(jnp.float32),
+                     kidx=lanes)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(enq.accepted))
+    np.testing.assert_array_equal(np.asarray(ovf), np.asarray(enq.overflow))
+    applied = rt.apply_winners(tbl, writer, written, newc,
+                               lanes, lanes, lanes,
+                               lanes.astype(jnp.float32), kidx=lanes)
+    for got_leaf, want_leaf in zip(applied, enq.table):
+        np.testing.assert_array_equal(np.asarray(got_leaf),
+                                      np.asarray(want_leaf))
+
+
+def test_cms_fast_ref_matches_onehot_oracle():
+    """The dispatcher's scatter/gather ref path == the one-hot kernel
+    transcription, including cross-tile estimate sequencing."""
+    for b, w, block in [(45, 512, 32), (513, 2048, 256)]:
+        hk = hash128_u32(jnp.asarray(RNG.integers(0, 1000, b), jnp.int32))
+        mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
+        counts = jnp.asarray(RNG.integers(0, 5, (5, w)), jnp.int32)
+        pad = (-b) % block
+        idx = jnp.pad(rows_for(hk, w), ((0, pad), (0, 0)))
+        msk = jnp.pad(mask, (0, pad))
+        for g, r in zip(cms_update_query_fast(idx, msk, counts, block_b=block),
+                        cms_update_query_ref(idx, msk, counts, block_b=block)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+# ---------------------------------------------------------------------------
 # backend dispatch layer
 # ---------------------------------------------------------------------------
 def test_dispatch_autodetect_picks_oracle_off_tpu(monkeypatch):
@@ -222,6 +311,10 @@ def test_dispatch_matches_oracles_on_all_backends():
     want_match = orbit_match_ref(hq, table, occ, val, mask)
     widx = jnp.pad(rows_for(hq, 256), ((0, 0), (0, 0)))
     want_cms = cms_update_query_ref(widx, mask, counts, block_b=b)
+    s = 4
+    qlen = jnp.asarray(RNG.integers(0, s + 1, c), jnp.int32)
+    rear = jnp.asarray(RNG.integers(0, s, c), jnp.int32)
+    want_pipe = orbit_pipeline_ref(hq, table, occ, val, mask, qlen, rear, s)
     for be in ("ref", "interpret"):
         kernels.set_kernel_backend(be)
         try:
@@ -233,5 +326,9 @@ def test_dispatch_matches_oracles_on_all_backends():
                                           np.asarray(want_cms[0]))
             np.testing.assert_array_equal(np.asarray(ek),
                                           np.asarray(want_cms[1][:b]))
+            got_pipe = kernels.orbit_pipeline(hq, table, occ, val, mask,
+                                              qlen, rear, s)
+            for g, w in zip(got_pipe, want_pipe):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
         finally:
             kernels.set_kernel_backend(None)

@@ -1,11 +1,21 @@
-"""switch_step kernel-dispatch regression: bit-identical to the seed path.
+"""Fused-pipeline regression: bit-identical to the composed seed path.
 
 The seed implementation did the lookup with ``lookup.lookup`` (pure [B, C]
-compare), a separate validity check, and a scatter-add popularity update.
-The dataplane now routes all three through the fused ``repro.kernels
-.orbit_match`` dispatcher.  This test replays mixed-op traffic through both
-implementations and asserts the StepOutput AND the resulting switch state
-are bit-identical, on the oracle backend and the Pallas interpreter.
+compare), a separate validity check, a scatter-add popularity update, and a
+free-standing ``rt.enqueue``; PR 1 fused the lookup slice into the
+``orbit_match`` kernel; this PR fuses the whole pass (match + admission +
+state + install winners) into ``kernels.orbit_pipeline`` behind
+``core.pipeline``, with orbit value bytes hoisted out of the per-subround
+scan.  These tests replay traffic through the seed-composed and fused
+implementations and assert bit-identical outputs and state:
+
+  * per step (``switch_step`` vs the verbatim seed sequence), on the
+    oracle backend and the Pallas interpreter;
+  * per window (``window_step`` vs a PR-1-style composed window that scans
+    the full SwitchState and installs value bytes eagerly), for all three
+    schemes;
+  * and the per-subround scan carry is checked to carry no orbit value
+    bytes (the hoist is structural, not incidental).
 """
 import jax
 import jax.numpy as jnp
@@ -15,6 +25,7 @@ import pytest
 from repro import kernels as kn
 from repro.core import lookup as lk
 from repro.core import orbit as ob
+from repro.core import pipeline as pipe
 from repro.core import request_table as rt
 from repro.core import state_table as stt
 from repro.core import switch as swm
@@ -166,6 +177,222 @@ def _assert_trees_equal(a, b, label):
         np.testing.assert_array_equal(
             np.asarray(la), np.asarray(lb),
             err_msg=f"{label}: mismatch at {jax.tree_util.keystr(path)}")
+
+
+# ---------------------------------------------------------------------------
+# window-level regression: fused pipeline vs the PR-1 composed window
+# ---------------------------------------------------------------------------
+def _composed_window_step(cfg, server_cfg, client_cfg, key_size, wl, carry):
+    """PR-1-style window step: full-SwitchState subround scan over the
+    seed-composed switch pass (eager value installs), identical client /
+    server / routing stages.  The reference the fused pipeline must match
+    bit-for-bit."""
+    from repro.baselines.netcache import netcache_step
+    from repro.baselines.nocache import nocache_step
+    from repro.kvstore import client as cl
+    from repro.kvstore import simulator as sim_mod
+    from repro.kvstore.server import server_step
+    from repro.core.types import OP_NONE, ROUTE_CLIENT, ROUTE_SERVER
+
+    c = cfg
+    rng, r_gen = jax.random.split(carry.rng)
+    clients, reqs = cl.generate(
+        carry.clients, client_cfg, r_gen,
+        wl.cdf, wl.perm, wl.vlen,
+        carry.offered, carry.write_ratio, c.num_servers, carry.now,
+    )
+    sub = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=1), reqs, carry.pending,
+        carry.fetch,
+    )
+    pad_to = sub.op.shape[0] * sub.op.shape[1]
+
+    window = jnp.float32(c.window_us)
+    if c.scheme == "orbitcache":
+        def one_subround(sw, pk):
+            live = sw.orbit.live
+            nlive = jnp.maximum(jnp.sum(live.astype(jnp.int32)), 1)
+            mean_line = (
+                jnp.sum(jnp.where(live, sw.orbit.vlen, 0)) / nlive
+                + sim_mod.HDR_BYTES + key_size
+            )
+            pps = (c.recirc_gbps * 1e9 / 8.0) / mean_line
+            budget = (pps * window * 1e-6 / c.subrounds).astype(jnp.int32)
+            sw2, out = _seed_switch_step(sw, pk, budget, c.max_serves)
+            interval_us = nlive.astype(jnp.float32) / pps * 1e6
+            return sw2, (out.route, out.flag, out.grid, out.stats, interval_us)
+
+        policy, (routes, flags, grids, stats, intervals) = jax.lax.scan(
+            one_subround, carry.policy, sub, unroll=c.subrounds
+        )
+        switch_reply = jnp.zeros((pad_to,), bool)
+        r_idx = jnp.arange(c.subrounds, dtype=jnp.float32)[:, None, None]
+        serve_time = (
+            carry.now
+            + (r_idx + 0.5) * window / c.subrounds
+            + (grids.order.astype(jnp.float32) + 1.0) * intervals[:, None, None]
+        )
+        clients = cl.account_switch_served(
+            clients, client_cfg,
+            grids.served.reshape(-1, c.max_serves),
+            grids.req_kidx.reshape(-1, c.max_serves),
+            grids.ts.reshape(-1, c.max_serves),
+            grids.kidx.reshape(-1),
+            serve_time.reshape(-1, c.max_serves),
+        )
+        hits = jnp.sum(stats.n_hit)
+        overflow = jnp.sum(stats.n_overflow) + jnp.sum(stats.n_invalid_fwd)
+        installs = jnp.sum(stats.n_install)
+        crn = jnp.sum(stats.n_crn)
+        rx_sw = jnp.sum(stats.n_served)
+    elif c.scheme == "netcache":
+        def one_subround(st, pk):
+            st2, route, flag, srep, n_hit = netcache_step(st, pk)
+            return st2, (route, flag, srep, n_hit)
+
+        policy, (routes, flags, sreps, n_hits) = jax.lax.scan(
+            one_subround, carry.policy, sub, unroll=c.subrounds
+        )
+        switch_reply = sreps.reshape(-1)
+        hits = jnp.sum(n_hits)
+        overflow = jnp.zeros((), jnp.int32)
+        installs = jnp.zeros((), jnp.int32)
+        crn = jnp.zeros((), jnp.int32)
+        lat = jnp.full((pad_to,), 1.0, jnp.float32) + client_cfg.base_rtt_us
+        bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
+        clients = clients._replace(
+            hist_switch=clients.hist_switch + cl._bucket_counts(bucket),
+            rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
+        )
+        rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
+    else:  # nocache
+        def one_subround(st, pk):
+            st2, route, flag = nocache_step(st, pk)
+            return st2, (route, flag)
+
+        policy, (routes, flags) = jax.lax.scan(one_subround, carry.policy,
+                                        sub, unroll=c.subrounds)
+        switch_reply = jnp.zeros((pad_to,), bool)
+        hits = overflow = installs = crn = jnp.zeros((), jnp.int32)
+        rx_sw = jnp.zeros((), jnp.int32)
+
+    route_flat = routes.reshape(-1)
+    flag_flat = flags.reshape(-1)
+    ing_flat = jax.tree.map(lambda a: a.reshape((pad_to,) + a.shape[2:]), sub)
+
+    to_server = (route_flat == ROUTE_SERVER) & ing_flat.valid
+    servers, sout = server_step(
+        carry.servers, server_cfg, ing_flat, to_server, flag_flat,
+        carry.now,
+    )
+
+    to_client = (route_flat == ROUTE_CLIENT) & ing_flat.valid & ~switch_reply
+    rx_srv_before = clients.rx_server
+    clients = cl.account_server_replies(
+        clients, client_cfg, ing_flat, to_client, carry.now + window
+    )
+    rx_srv = clients.rx_server - rx_srv_before
+
+    reply_w, reply_pad = sim_mod._reply_width(cfg, server_cfg)
+    rep = sout.replies
+    if reply_pad:
+        pad_b = empty_batch(reply_pad, c.value_pad)
+        rep = jax.tree.map(lambda a, p: jnp.concatenate([a, p]), rep, pad_b)
+    pending = sim_mod.interleave(rep, c.subrounds)
+
+    metrics = sim_mod.WindowMetrics(
+        tx=jnp.sum((reqs.valid & (reqs.op != OP_NONE)).astype(jnp.int32)),
+        rx_switch=rx_sw,
+        rx_server=rx_srv,
+        served=sout.served_now,
+        dropped=sout.dropped_now,
+        backlog=sout.backlog,
+        hits=hits,
+        overflow=overflow,
+        installs=installs,
+        crn=crn,
+        mismatches=clients.mismatches,
+    )
+    new_carry = sim_mod.SimCarry(
+        policy=policy,
+        servers=servers,
+        clients=clients,
+        pending=pending,
+        fetch=sim_mod.interleave(empty_batch(c.fetch_lanes, c.value_pad),
+                                 c.subrounds),
+        rng=rng,
+        now=carry.now + window,
+        offered=carry.offered,
+        write_ratio=carry.write_ratio,
+    )
+    return new_carry, metrics
+
+
+@pytest.mark.parametrize("scheme", ["orbitcache", "netcache", "nocache"])
+def test_window_step_bit_identical_to_composed(scheme):
+    from repro.kvstore import simulator as sim_mod
+    from repro.kvstore.simulator import RackConfig, RackSimulator
+    from repro.kvstore.workload import Workload, WorkloadConfig
+
+    wl = Workload(WorkloadConfig(num_keys=5_000, offered_rps=1.5e6,
+                                 write_ratio=0.1))
+    cfg = RackConfig(scheme=scheme, cache_entries=32, num_servers=4,
+                     client_batch=128, fetch_lanes=32, value_pad=64,
+                     server_queue=32, subrounds=2)
+    sim = RackSimulator(cfg, wl)
+    if scheme == "orbitcache":
+        sim.preload(wl.hottest_keys(32))
+    elif scheme == "netcache":
+        sim.preload(wl.hottest_keys(500))
+
+    fused = jax.jit(lambda w, cr: sim_mod.window_step(
+        cfg, sim.server_cfg, sim.client_cfg, sim.key_size, w, cr))
+    composed = jax.jit(lambda w, cr: _composed_window_step(
+        cfg, sim.server_cfg, sim.client_cfg, sim.key_size, w, cr))
+
+    carry_a = carry_b = sim.carry
+    for w in range(4):
+        carry_a, met_a = fused(wl.arrays, carry_a)
+        carry_b, met_b = composed(wl.arrays, carry_b)
+        _assert_trees_equal(met_a, met_b, f"{scheme} window {w} metrics")
+        _assert_trees_equal(carry_a, carry_b, f"{scheme} window {w} carry")
+
+
+def test_subround_carry_has_no_orbit_value_bytes():
+    """The hoist is structural: the scan carry type holds no value bytes,
+    and reattaching them roundtrips the SwitchState exactly."""
+    sw = init_switch_state(8, queue_size=4, value_pad=128, max_frags=2)
+    carry, val = pipe.strip_val(sw)
+    assert val.shape == (16, 128) and val.dtype == jnp.uint8
+    for path, leaf in jax.tree_util.tree_leaves_with_path(carry):
+        assert leaf.dtype != jnp.uint8, (
+            f"orbit value bytes leaked into the subround carry at "
+            f"{jax.tree_util.keystr(path)}")
+    _assert_trees_equal(pipe.with_val(carry, val), sw, "strip/with_val")
+
+
+def test_window_step_routes_through_pipeline(monkeypatch):
+    """window_step's orbitcache branch runs on core.pipeline (trace-time
+    spy), i.e. the value-light PipelineCarry scan, not the composed path."""
+    from repro.kvstore import simulator as sim_mod
+    from repro.kvstore.simulator import RackConfig, RackSimulator
+    from repro.kvstore.workload import Workload, WorkloadConfig
+
+    calls = []
+    orig = pipe.window_pipeline
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(sim_mod.pipeline, "window_pipeline", spy)
+    wl = Workload(WorkloadConfig(num_keys=1_000, offered_rps=5e5))
+    cfg = RackConfig(scheme="orbitcache", cache_entries=16, num_servers=2,
+                     client_batch=64, fetch_lanes=16, value_pad=64,
+                     server_queue=16, subrounds=2)
+    sim = RackSimulator(cfg, wl)
+    sim.run_windows(1)
+    assert calls, "window_step did not route through pipeline.window_pipeline"
 
 
 @pytest.mark.parametrize("backend", ["ref", "interpret"])
