@@ -17,6 +17,18 @@ mirrored in ``latest``, so the perf trajectory survives across PRs —
 regress against the history before touching the hot path.
 
 Run: ``PYTHONPATH=src python -m benchmarks.perf_smoke``
+
+Gate mode (``--check``): after measuring, the fresh batched windows/sec is
+compared against the median of the same-host history entries; a >20% drop
+exits nonzero (CI-able perf regression gate).  When no same-host history
+exists the check only warns — cross-host numbers are not comparable.
+
+Breakdown mode (``--breakdown``): times the window's stages in isolation
+(client generation, the fused switch ``window_pipeline``, the full
+``window_step``) and prints a compiled-HLO summary of the measured chunk
+(instruction/fusion counts, custom calls — the fused-kernel count shows
+here on the Pallas backends), so a perf diff can be attributed to a stage
+before bisecting.
 """
 from __future__ import annotations
 
@@ -83,6 +95,125 @@ def append_history(out_path: str, run: dict) -> dict:
     return data
 
 
+def same_host_median(history: list[dict], run: dict) -> float | None:
+    """Median batched windows/sec of prior comparable runs.
+
+    Comparable = same host, same points/windows config AND same jax/kernel
+    backends (an interpret-backend run is several times slower than ref —
+    mixing them would both false-trip the gate and drag the median).  Runs
+    that failed their own ``--check`` gate are excluded so a regressed
+    branch retrying in CI cannot vote its own regression into the
+    baseline.
+    """
+    prior = [
+        h for h in history
+        if h.get("host") == run["host"] and h is not run
+        and h.get("config", {}).get("points") == run["config"]["points"]
+        and h.get("config", {}).get("windows") == run["config"]["windows"]
+        and h.get("env", {}).get("jax_backend") == run["env"]["jax_backend"]
+        and (h.get("env", {}).get("kernel_backend")
+             == run["env"]["kernel_backend"])
+        and not h.get("regressed")
+    ]
+    if not prior:
+        return None
+    return statistics.median(
+        h["batched"]["windows_per_s_best"] for h in prior)
+
+
+def check_regression(history: list[dict], run: dict,
+                     threshold: float = 0.8) -> int:
+    """Exit status for --check: 1 on a >(1-threshold) drop vs the median."""
+    med = same_host_median(history, run)
+    cur = run["batched"]["windows_per_s_best"]
+    if med is None:
+        print(f"# check: no same-host history for {run['host']!r} — "
+              "nothing to compare against (warn only)", flush=True)
+        return 0
+    verdict = "OK" if cur >= threshold * med else "REGRESSION"
+    print(f"check,{cur:.0f},vs_median_{med:.0f},"
+          f"ratio_{cur / med:.3f},{verdict}", flush=True)
+    if verdict == "REGRESSION":
+        print(f"# batched windows/sec fell >{(1 - threshold) * 100:.0f}% "
+              f"below the same-host history median — investigate before "
+              f"merging (see --breakdown)", flush=True)
+        return 1
+    return 0
+
+
+def run_breakdown(sim, wl, reps: int = 30) -> dict:
+    """Per-stage timings + compiled-HLO summary for the serial window.
+
+    Stages are timed on their own jitted closures (compile excluded):
+    ``ingress_gen`` (the production ``simulator.generate_ingress`` —
+    open-loop request generation + subround-major ingress assembly),
+    ``switch_pipeline`` (the fused kernel-backed ``window_pipeline`` alone
+    — the data plane), and ``full_window`` (everything incl.
+    servers/clients/routing).  The HLO summary counts instructions per
+    opcode in the compiled measured chunk; on the Pallas backends the
+    fused subround shows up as one custom call per subround.
+    """
+    from repro.core import pipeline
+    from repro.kvstore import simulator as sim_mod
+    from repro.launch.hlo_analysis import parse_computations
+
+    cfg, scfg, ccfg = sim.cfg, sim.server_cfg, sim.client_cfg
+    carry = sim.carry
+    arrs = wl.arrays
+
+    def gen(cr):
+        return sim_mod.generate_ingress(cfg, ccfg, arrs, cr)
+
+    _, _, _, sub = jax.jit(gen)(carry)
+
+    def pipe_fn(sw, sb):
+        return pipeline.window_pipeline(
+            sw, sb, recirc_gbps=cfg.recirc_gbps, window_us=cfg.window_us,
+            subrounds=cfg.subrounds, max_serves=cfg.max_serves,
+            key_size=sim.key_size)
+
+    def win_fn(w, cr):
+        return sim_mod.window_step(cfg, scfg, ccfg, sim.key_size, w, cr)
+
+    stages = {
+        "ingress_gen": (jax.jit(gen), (carry,)),
+        "switch_pipeline": (jax.jit(pipe_fn), (carry.policy, sub)),
+        "full_window": (jax.jit(win_fn), (arrs, carry)),
+    }
+    timings = {}
+    for name, (fn, fargs) in stages.items():
+        jax.block_until_ready(fn(*fargs))  # compile outside the clock
+        t0 = time.time()
+        for _ in range(reps):
+            out = fn(*fargs)
+        jax.block_until_ready(out)
+        timings[name] = (time.time() - t0) / reps
+    for name, dt in sorted(timings.items(), key=lambda kv: kv[1]):
+        frac = dt / max(timings["full_window"], 1e-12)
+        print(f"breakdown,{name},{dt * 1e3:.3f},ms_per_window,"
+              f"{frac:.2f},of_full_window", flush=True)
+
+    # compiled-HLO summary of the measured chunk
+    chunk = sim._chunk(8)
+    hlo = chunk.lower(arrs, carry).compile().as_text()
+    counts: dict[str, int] = {}
+    comps = parse_computations(hlo)
+    for comp in comps.values():
+        for inst in comp.instructions:
+            counts[inst.opcode] = counts.get(inst.opcode, 0) + 1
+    top = sorted(counts.items(), key=lambda kv: -kv[1])[:10]
+    total = sum(counts.values())
+    print(f"hlo,total_instructions,{total},computations,{len(comps)},"
+          f"custom_calls,{counts.get('custom-call', 0)}", flush=True)
+    print("hlo_top," + ",".join(f"{op}:{n}" for op, n in top), flush=True)
+    return {
+        "stage_ms": {k: v * 1e3 for k, v in timings.items()},
+        "hlo": {"total_instructions": total, "computations": len(comps),
+                "custom_calls": counts.get("custom-call", 0),
+                "top_opcodes": dict(top)},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--points", type=int, default=16,
@@ -91,6 +222,12 @@ def main() -> None:
                     help="measured windows per point per rep")
     ap.add_argument("--reps", type=int, default=3,
                     help="interleaved (serial, batched) measurement pairs")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on a >20%% batched-windows/sec "
+                         "regression vs the same-host history median")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="also time window stages in isolation and print a "
+                         "compiled-HLO summary")
     ap.add_argument("--out", default=os.path.join(REPO_ROOT,
                                                   "BENCH_simulator.json"))
     args = ap.parse_args()
@@ -174,11 +311,31 @@ def main() -> None:
         "speedup_windows_per_s": speedup,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
+    if args.breakdown:
+        result["breakdown"] = run_breakdown(sims[0], wl)
+    # Gate BEFORE persisting: a run that fails its own check is still
+    # recorded (the trajectory should show the dip) but flagged, and
+    # flagged entries never enter the baseline median — retries of a
+    # regressed branch cannot poison the gate they are failing.
+    status = 0
+    if args.check:
+        prior = []
+        if os.path.exists(args.out):
+            try:
+                with open(args.out) as f:
+                    prior = json.load(f).get("history", [])
+            except (OSError, ValueError):
+                prior = []
+        status = check_regression(prior, result)
+        if status:
+            result["regressed"] = True
     data = append_history(args.out, result)
     with open(args.out, "w") as f:
         json.dump(data, f, indent=1)
     print(f"# wrote {args.out} ({len(data['history'])} runs in history)",
           flush=True)
+    if args.check:
+        sys.exit(status)
 
 
 if __name__ == "__main__":

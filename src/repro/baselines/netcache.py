@@ -38,8 +38,10 @@ from repro.core.types import (
     ROUTE_CLIENT,
     ROUTE_DROP,
     ROUTE_SERVER,
+    COUNTER_DTYPE,
     HKEY_LANES,
     PacketBatch,
+    sat_add,
 )
 
 N_PROBES = 2
@@ -52,7 +54,7 @@ class NetCacheState(NamedTuple):
     valid: jnp.ndarray     # bool[T]
     val: jnp.ndarray       # uint8[T, value_limit]
     vlen: jnp.ndarray      # int32[T]
-    hits: jnp.ndarray      # int32[]
+    hits: jnp.ndarray      # uint32[] running hit count (sat_add, wrap-safe)
     version: jnp.ndarray   # int32[T]
 
 
@@ -65,7 +67,7 @@ def init_netcache(table_size: int, value_limit: int) -> NetCacheState:
         valid=jnp.zeros((t,), bool),
         val=jnp.zeros((t, value_limit), jnp.uint8),
         vlen=jnp.zeros((t,), jnp.int32),
-        hits=jnp.zeros((), jnp.int32),
+        hits=jnp.zeros((), COUNTER_DTYPE),
         version=jnp.zeros((t,), jnp.int32),
     )
 
@@ -134,7 +136,7 @@ def netcache_step(st: NetCacheState, pkts: PacketBatch):
 
     st2 = st._replace(
         valid=valid_arr, version=version, val=val, vlen=vlen,
-        hits=st.hits + n_hit,
+        hits=sat_add(st.hits, n_hit),
     )
     return st2, route, flag, switch_reply, n_hit
 

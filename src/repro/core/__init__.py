@@ -16,6 +16,7 @@ from .types import (  # noqa: F401
     OP_NONE, ROUTE_DROP, ROUTE_SERVER, ROUTE_CLIENT, HKEY_LANES,
     PacketBatch, LookupTable, StateTable, RequestTable, OrbitBuffer,
     OrbitMeta, Counters, SwitchState, empty_batch, init_switch_state,
+    COUNTER_DTYPE, sat_add,
 )
 from .hashing import hash128_u32, hash128_u32_np, hash128_bytes_np, server_of_key  # noqa: F401
 from .pipeline import (  # noqa: F401

@@ -36,12 +36,14 @@ from repro.parallel.sharding import axis_size_compat
 from . import lookup as lk
 from . import request_table as rt
 from .types import (
+    COUNTER_DTYPE,
     OP_R_REQ,
     OP_W_REQ,
     LookupTable,
     PacketBatch,
     RequestTable,
     StateTable,
+    sat_add,
 )
 
 
@@ -61,9 +63,9 @@ class RingState(NamedTuple):
     state: StateTable
     reqtab: RequestTable  # local request queues
     slice: OrbitSlice     # resident orbit lines
-    popularity: jnp.ndarray  # int32[C] local popularity counters
-    overflow: jnp.ndarray    # int32[] local overflow count
-    hits: jnp.ndarray        # int32[]
+    popularity: jnp.ndarray  # uint32[C] local popularity counters
+    overflow: jnp.ndarray    # uint32[] local overflow count (sat_add)
+    hits: jnp.ndarray        # uint32[] (sat_add)
 
 
 def init_ring_state(
@@ -100,9 +102,11 @@ def init_ring_state(
             vlen=jnp.zeros((l,), jnp.int32),
             val=jnp.zeros((l, value_pad), jnp.uint8),
         ),
-        popularity=jnp.zeros((c,), jnp.int32),
-        overflow=jnp.zeros((), jnp.int32),
-        hits=jnp.zeros((), jnp.int32),
+        # running counters: wrap-safe dtype, accumulated via sat_add (same
+        # rationale as SwitchState's Counters — see types.sat_add)
+        popularity=jnp.zeros((c,), COUNTER_DTYPE),
+        overflow=jnp.zeros((), COUNTER_DTYPE),
+        hits=jnp.zeros((), COUNTER_DTYPE),
     )
 
 
@@ -203,8 +207,8 @@ def ring_step(
         reqtab=reqtab,
         slice=rotated,
         popularity=pop,
-        overflow=st.overflow + n_ovf,
-        hits=st.hits + n_hit,
+        overflow=sat_add(st.overflow, n_ovf),
+        hits=sat_add(st.hits, n_hit),
     )
     return st2, serve
 

@@ -77,7 +77,12 @@ def pass_budget(orbit: OrbitBuffer, recirc_packets: jnp.ndarray) -> jnp.ndarray:
 
 def orbit_pass(sw: SwitchState, recirc_packets: jnp.ndarray, max_serves: int,
                ) -> tuple[SwitchState, ServeGrid]:
-    """One serving round: refresh liveness, serve pending requests, pop them."""
+    """One serving round: refresh liveness, serve pending requests, pop them.
+
+    The production pipeline runs this round INSIDE ``kernels.subround``
+    (final grid step); this composition is the oracle for kernel parity and
+    the unit-test surface for the budget/liveness rules.
+    """
     orbit = refresh_liveness(sw)
     budget = pass_budget(orbit, recirc_packets)
     deq = rt.peek_front(sw.reqtab, budget, max_serves)

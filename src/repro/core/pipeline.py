@@ -1,12 +1,17 @@
-"""The unified fused switch pipeline: one kernel-backed pass per subround.
+"""The unified fused switch pipeline: ONE kernel call per subround.
 
 OrbitCache's core claim is that the *entire* per-packet decision — orbit
-match, request-table admission, state update, egress selection — happens in
-one switch data-plane pass (paper §3.3).  This module is that pass:
-:func:`subround_pipeline` runs one ingress batch through the fused
-``kernels.orbit_pipeline`` op (match + admission in a single VMEM-resident
-kernel) and the scatter-free state/orbit appliers, and
-:func:`window_pipeline` scans it over a window's subrounds.
+match, request-table admission, state update, orbit install, the orbit
+serving round, egress selection — happens in one switch data-plane pass
+(paper §3.3, Fig. 4).  This module is that pass: :func:`subround_pipeline`
+runs one ingress batch through the fused ``kernels.subround`` op — a single
+``pallas_call`` on the kernel backends covering match, admission + metadata
+apply, the state-table invalidate/validate pass, the orbit-line metadata
+install, and the serving round (liveness refresh, recirculation-budget
+split, front-slot gathers, dequeue).  Everything left outside the kernel is
+a pure element-wise reduction over its outputs (routing masks, StepStats
+sums, counter accumulation); :func:`window_pipeline` scans the pass over a
+window's subrounds.
 
 Value-byte hoisting
 -------------------
@@ -22,9 +27,10 @@ to installing eagerly, while the scan carry shrinks by the whole
 ``[C*F, value_pad]`` byte buffer.
 
 The free-standing step functions (``switch.switch_step``, ``rt.enqueue``,
-``stt.invalidate``/``validate``, ``orbit.install_lines``) remain as thin
-wrappers/oracles for unit tests; production callers (`kvstore.simulator`,
-`kvstore.fleet`) go through :func:`window_pipeline`.
+``stt.apply_batch``, ``orbit.install_lines_meta``, ``orbit.orbit_pass``)
+remain as thin wrappers/oracles for unit tests and kernel parity;
+production callers (`kvstore.simulator`, `kvstore.fleet`) go through
+:func:`window_pipeline`.
 """
 from __future__ import annotations
 
@@ -36,8 +42,6 @@ import jax.numpy as jnp
 from repro import kernels as kn
 
 from . import orbit as ob
-from . import request_table as rt
-from . import state_table as stt
 from .types import (
     OP_CRN_REQ,
     OP_F_REP,
@@ -57,6 +61,7 @@ from .types import (
     RequestTable,
     StateTable,
     SwitchState,
+    sat_add,
 )
 
 # ethernet+ip+udp+orbitcache header overhead per cache packet (paper §3.2);
@@ -74,7 +79,12 @@ class StepStats(NamedTuple):
     n_w_cached: jnp.ndarray    # writes to cached keys (invalidations)
     n_install: jnp.ndarray     # orbit lines installed (W-REP/F-REP)
     n_served: jnp.ndarray      # requests served by orbit lines
-    bytes_served: jnp.ndarray  # value bytes served from orbit
+    bytes_served: jnp.ndarray  # value bytes served from orbit this subround
+                               # (uint32: doubles the wrap horizon vs int32
+                               # and never goes negative; per-subround values
+                               # are bounded by C*J*value_pad, but callers
+                               # summing long traces must still widen —
+                               # e.g. np.sum(..., dtype=np.uint64))
     n_crn: jnp.ndarray         # correction requests (collision resolution)
 
 
@@ -137,12 +147,19 @@ def subround_pipeline(
 ) -> tuple[PipelineCarry, SubroundOut]:
     """One fused ingress pass + orbit serving round (paper Fig. 4).
 
-    Bit-identical to the composed seed sequence (``lookup`` + ``enqueue`` +
-    state table + ``install_lines`` + ``orbit_pass``) except that value
-    bytes are *not* applied — the install winners come back in the output
-    for the once-per-window apply.
+    The WHOLE subround is one ``kernels.subround`` call — a single
+    ``pallas_call`` on the kernel backends — covering match, request-table
+    admission + metadata apply, the state-table pass, the orbit-line
+    metadata install and the serving round.  Everything below the kernel
+    call is a pure element-wise reduction over its outputs (routing masks,
+    StepStats sums, saturating counter accumulation).  Bit-identical to the
+    composed seed sequence (``lookup`` + ``enqueue`` + state table +
+    ``install_lines`` + ``orbit_pass``) except that value bytes are *not*
+    applied — the install winners come back in the output for the
+    once-per-window apply.
     """
     op, valid = pkts.op, pkts.valid
+    i32 = jnp.int32
 
     r_req = valid & (op == OP_R_REQ)
     w_req = valid & (op == OP_W_REQ)
@@ -152,66 +169,77 @@ def subround_pipeline(
     f_req = valid & (op == OP_F_REQ)
     crn = valid & (op == OP_CRN_REQ)
 
-    # Fused match + admission (kernel dispatch: Pallas on TPU, jnp oracle
-    # elsewhere): 128-bit exact-match, validity filter, popularity
-    # accumulation AND the request-table winner pass, one VMEM pass.
-    (cidx, khit, kvhit, pop_delta, accepted, overflow, new_counts,
-     rt_writer, rt_written) = kn.orbit_pipeline(
-        pkts.hkey, carry.lookup.hkeys,
-        carry.lookup.occupied.astype(jnp.int32),
-        carry.state.valid.astype(jnp.int32),
-        r_req.astype(jnp.int32),
-        carry.reqtab.qlen, carry.reqtab.rear,
-        carry.reqtab.queue_size,
+    lk, st, rt_, orb = carry.lookup, carry.state, carry.reqtab, carry.orbit
+    k = kn.subround(
+        pkts.hkey,
+        r_req.astype(i32),                                   # want gate
+        w_req.astype(i32),                                   # invalidate gate
+        ((w_rep | f_rep) & (pkts.flag >= 1)).astype(i32),    # install gate
+        jnp.where(f_rep, pkts.seq, 0),   # F-REP: seq carries fragment number
+        jnp.maximum(pkts.flag, 1),       # FLAG carries total fragment count
+        pkts.kidx, pkts.vlen, pkts.client, pkts.seq, pkts.port, pkts.ts,
+        lk.hkeys, lk.occupied.astype(i32), st.valid.astype(i32), st.version,
+        rt_.client, rt_.seq, rt_.port, rt_.ts, rt_.acked, rt_.kidx,
+        rt_.qlen, rt_.front, rt_.rear,
+        orb.live.astype(i32), orb.kidx, orb.version, orb.vlen, orb.frags,
+        recirc_packets,
+        queue_size=rt_.queue_size, max_frags=orb.max_frags,
+        max_serves=max_serves,
     )
-    hit = (khit > 0) & valid
-    safe_cidx = jnp.where(hit, cidx, 0)
 
-    # ---- read requests (Fig. 4a) -----------------------------------------
+    # ---- pure reductions over the kernel outputs ---------------------------
+    hit = (k.hit > 0) & valid
+    entry_valid = (k.vhit > 0) & valid
+    accepted = k.accepted > 0
+    overflow = k.overflow > 0
     r_hit = r_req & hit
-    entry_valid = (kvhit > 0) & valid
     invalid_fwd = r_hit & ~entry_valid
-    reqtab = rt.apply_winners(
-        carry.reqtab, rt_writer, rt_written, new_counts,
-        pkts.client, pkts.seq, pkts.port, pkts.ts, kidx=pkts.kidx,
-    )
-
-    popularity = carry.counters.popularity + pop_delta
-    n_hit = jnp.sum(r_hit.astype(jnp.int32))
-    n_overflow = jnp.sum(overflow.astype(jnp.int32))
-    n_invalid_fwd = jnp.sum(invalid_fwd.astype(jnp.int32))
-
-    # ---- write requests + replies (Fig. 4c/4d) ----------------------------
     w_cached = w_req & hit
     install = (w_rep | f_rep) & hit & (pkts.flag >= 1)
-    state3 = stt.apply_batch(carry.state, safe_cidx, w_cached, install)
     flag_out = jnp.where(w_cached, jnp.int32(1), pkts.flag)
 
-    # Version at install time: current version (post any same-batch
-    # invalidations) so the fresh line is immediately current.
-    inst_version = state3.version[safe_cidx]
-    frag = jnp.where(f_rep, pkts.seq, 0)  # F-REP: seq carries fragment number
-    orbit2, val_writer, val_written = ob.install_lines_meta(
-        carry.orbit, safe_cidx, install, pkts.kidx, inst_version,
-        pkts.vlen, frag=frag, n_frags=jnp.maximum(pkts.flag, 1),
-    )
+    n_hit = jnp.sum(r_hit.astype(i32))
+    n_overflow = jnp.sum(overflow.astype(i32))
+    n_invalid_fwd = jnp.sum(invalid_fwd.astype(i32))
 
     counters = Counters(
-        popularity=popularity,
-        hits=carry.counters.hits + n_hit,
-        overflow=carry.counters.overflow + n_overflow + n_invalid_fwd,
-        cached_reqs=carry.counters.cached_reqs + n_hit,
+        popularity=sat_add(carry.counters.popularity, k.pop),
+        hits=sat_add(carry.counters.hits, n_hit),
+        overflow=sat_add(carry.counters.overflow, n_overflow + n_invalid_fwd),
+        cached_reqs=sat_add(carry.counters.cached_reqs, n_hit),
     )
-    carry2 = PipelineCarry(
-        lookup=carry.lookup, state=state3, reqtab=reqtab, orbit=orbit2,
+    carry3 = PipelineCarry(
+        lookup=lk,
+        state=StateTable(valid=k.st_valid.astype(bool), version=k.st_version),
+        reqtab=RequestTable(
+            client=k.rt_client, seq=k.rt_seq, port=k.rt_port, ts=k.rt_ts,
+            acked=k.rt_acked, kidx=k.rt_kidx,
+            qlen=k.qlen, front=k.front, rear=k.rear,
+        ),
+        orbit=OrbitMeta(live=k.ob_live.astype(bool), kidx=k.ob_kidx,
+                        version=k.ob_version, vlen=k.ob_vlen,
+                        frags=k.ob_frags),
         counters=counters,
     )
 
-    # ---- orbit serving round (Fig. 4b) ------------------------------------
-    carry3, grid = ob.orbit_pass(carry2, recirc_packets, max_serves)
-    n_served = jnp.sum(grid.served.astype(jnp.int32))
+    served = k.served > 0
+    grid = ob.ServeGrid(
+        served=served,
+        client=k.g_client,
+        seq=k.g_seq,
+        port=k.g_port,
+        ts=k.g_ts,
+        order=jnp.broadcast_to(jnp.arange(max_serves, dtype=i32)[None, :],
+                               served.shape),
+        req_kidx=k.g_kidx,
+        kidx=k.line_kidx,
+        vlen=k.line_vlen,
+        version=k.line_version,
+    )
+    n_served = jnp.sum(served.astype(i32))
     bytes_served = jnp.sum(
-        jnp.where(grid.served, grid.vlen[:, None], 0)).astype(jnp.int32)
+        jnp.where(served, grid.vlen[:, None], 0)).astype(jnp.uint32)
+    val_writer, val_written = k.val_writer, k.val_written > 0
 
     # ---- routing ----------------------------------------------------------
     route = jnp.full(pkts.width, ROUTE_DROP, jnp.int32)
@@ -250,17 +278,28 @@ def install_window_values(
     """Apply a window's orbit value installs in one pass.
 
     Per line, the winner is the LAST subround that installed it (within a
-    subround, ``install_lines_meta`` already picked the last lane) — the
-    order eager scatters would have applied in, so the result is
+    subround, the kernel's install reduction already picked the last lane)
+    — the order eager scatters would have applied in, so the result is
     bit-identical to installing every subround.
+
+    The apply is a row *scatter* (``.at[].set`` with unwritten lines
+    dropped), not a full-buffer ``where`` select: winner lines are distinct
+    by construction, so the two are bit-identical, but the scatter lets XLA
+    update the donated ``val`` buffer in place inside the window scan —
+    untouched ``val`` rows are never rewritten, where the ``where`` form
+    read AND wrote the whole ``[C*F, value_pad]`` buffer every window.
+    (The gathered update operand ``batch_val[r_star, lane]`` is still a
+    dense ``[C*F, value_pad]`` temporary — the win is on the ``val``
+    copy/write side, not the gather.)
     """
-    r = val_written.shape[0]
+    r, cf = val_written.shape
     # last subround with an install, per line
     rev = val_written[::-1]
     r_star = (r - 1 - jnp.argmax(rev, axis=0)).astype(jnp.int32)   # [C*F]
     any_w = jnp.any(val_written, axis=0)
     lane = jnp.take_along_axis(val_writer, r_star[None, :], axis=0)[0]
-    return jnp.where(any_w[:, None], batch_val[r_star, lane], val)
+    lines = jnp.where(any_w, jnp.arange(cf, dtype=jnp.int32), cf)
+    return val.at[lines].set(batch_val[r_star, lane], mode='drop')
 
 
 def switch_pipeline(

@@ -78,10 +78,11 @@ def apply_winners(
 ) -> RequestTable:
     """Apply a kernel-computed unique-writer admission pass.
 
-    The fused ``kernels.orbit_pipeline`` op performs :func:`enqueue`'s
-    match + offset + winner reduction inside the switch kernel; this
-    function is the remaining metadata gather + pointer bump.  ``enqueue``
-    stays as the free-standing oracle (unit tests, kernel parity).
+    The fused ``kernels.subround`` op performs :func:`enqueue`'s match +
+    offset + winner reduction AND this metadata gather + pointer bump
+    inside the switch kernel; both functions survive as the free-standing
+    oracles the kernel is parity-tested against (``kernels.orbit_pipeline``
+    still uses this apply directly).
     """
     s = table.queue_size
     def put(arr, val):

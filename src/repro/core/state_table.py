@@ -43,7 +43,9 @@ def apply_batch(st: StateTable, cidx: jnp.ndarray, inval_mask: jnp.ndarray,
 
     Bit-identical to ``validate(invalidate(st, cidx, inval_mask), cidx,
     valid_mask)`` — the two one-hot matrices are built from the same
-    ``cidx`` gather and reduced together (the pipeline's single-pass form).
+    ``cidx`` gather and reduced together.  The production pipeline runs
+    this pass INSIDE ``kernels.subround``; this function is the oracle it
+    is parity-tested against.
     """
     c = st.valid.shape[0]
     oh_inv = _onehot(cidx, inval_mask, c)

@@ -20,9 +20,10 @@ Orbit lines never appear in the ingress batch: recirculation is internal
 port" is structural here.
 
 The implementation lives in :mod:`repro.core.pipeline` — the whole pass is
-one fused ``kernels.orbit_pipeline`` op plus scatter-free appliers, scanned
-per subround by production callers.  ``switch_step`` is the thin
-single-batch wrapper kept for unit tests and examples.
+ONE fused ``kernels.subround`` op (a single ``pallas_call`` per subround on
+the kernel backends), scanned per subround by production callers.
+``switch_step`` is the thin single-batch wrapper kept for unit tests and
+examples.
 """
 from __future__ import annotations
 

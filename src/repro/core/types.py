@@ -183,13 +183,36 @@ class OrbitMeta(NamedTuple):
         return self.live.shape[0] // self.frags.shape[0]
 
 
-class Counters(NamedTuple):
-    """Key counters (paper §3.1): popularity per key + global hit/overflow."""
+COUNTER_DTYPE = jnp.uint32
 
-    popularity: jnp.ndarray  # int32[C]
-    hits: jnp.ndarray        # int32[]  total cache hits
-    overflow: jnp.ndarray    # int32[]  requests for cached keys sent to servers
-    cached_reqs: jnp.ndarray # int32[]  total requests for cached keys
+
+def sat_add(acc: jnp.ndarray, delta) -> jnp.ndarray:
+    """Wrap-safe counter accumulate: ``acc + delta``, saturating at the max.
+
+    The running switch counters live for the whole simulation (popularity
+    merges only reset on control-plane periods), so a long multi-window run
+    can push them past 2**31 — int32 accumulation silently wraps negative
+    and corrupts the controller's ranking and the dynamic-sizing ratio.
+    Counters therefore accumulate in :data:`COUNTER_DTYPE` (uint32) and
+    clamp at the dtype max instead of wrapping; ``delta`` must be
+    non-negative (it is cast into the accumulator dtype here — never rely
+    on implicit uint/int promotion, which jax resolves to int32).
+    """
+    delta = jnp.asarray(delta).astype(acc.dtype)
+    room = jnp.asarray(jnp.iinfo(acc.dtype).max, acc.dtype) - acc
+    return acc + jnp.minimum(delta, room)
+
+
+class Counters(NamedTuple):
+    """Key counters (paper §3.1): popularity per key + global hit/overflow.
+
+    All fields are running accumulators in :data:`COUNTER_DTYPE` updated
+    via :func:`sat_add` (wrap-safe; see its docstring)."""
+
+    popularity: jnp.ndarray  # uint32[C]
+    hits: jnp.ndarray        # uint32[]  total cache hits
+    overflow: jnp.ndarray    # uint32[]  requests for cached keys sent to servers
+    cached_reqs: jnp.ndarray # uint32[]  total requests for cached keys
 
 
 class SwitchState(NamedTuple):
@@ -240,9 +263,9 @@ def init_switch_state(
             frags=jnp.ones((c,), jnp.int32),
         ),
         counters=Counters(
-            popularity=jnp.zeros((c,), jnp.int32),
-            hits=jnp.zeros((), jnp.int32),
-            overflow=jnp.zeros((), jnp.int32),
-            cached_reqs=jnp.zeros((), jnp.int32),
+            popularity=jnp.zeros((c,), COUNTER_DTYPE),
+            hits=jnp.zeros((), COUNTER_DTYPE),
+            overflow=jnp.zeros((), COUNTER_DTYPE),
+            cached_reqs=jnp.zeros((), COUNTER_DTYPE),
         ),
     )

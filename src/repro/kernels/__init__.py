@@ -13,7 +13,8 @@ update/query) are formulated as 128-aligned one-hot contractions, and
 
 Backend dispatch
 ----------------
-The simulator hot path calls the dispatchers below (``orbit_pipeline``,
+The simulator hot path calls the dispatchers below (``subround`` — the
+whole per-subround switch pass as ONE kernel, ``orbit_pipeline``,
 ``orbit_match``, ``cms_update_query``, ``hot_gather``) instead of picking
 a kernel variant by hand.  The backend is resolved once per trace:
 
@@ -111,6 +112,47 @@ def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
     from .orbit_pipeline.ops import orbit_pipeline as _op
     return _op(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
                queue_size, block_b=block_b, interpret=(be == "interpret"))
+
+
+def subround(
+    hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port, ts,
+    table_hkeys, occupied, st_valid, st_version,
+    rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front, rear,
+    ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+    budget,
+    queue_size: int, max_frags: int, max_serves: int, block_b: int = 128,
+):
+    """The FULL per-subround switch pass as one fused op (paper Fig. 4).
+
+    Superset of ``orbit_pipeline``: 128-bit match, validity filter,
+    popularity, request-table admission AND metadata apply, the state-table
+    invalidate/validate pass, the orbit-line metadata install (value bytes
+    deferred to the per-window apply), and the orbit serving round
+    (liveness refresh, recirculation-budget split, front-slot gathers,
+    served-entry dequeue).  On the kernel backends this is a single
+    ``pallas_call``; ``ref`` runs the pure-jnp oracle.  All gate masks must
+    already include lane validity.  Returns an ``ops.SubroundOuts``.
+    """
+    be = kernel_backend()
+    if be == "ref":
+        from .orbit_pipeline.ops import SubroundOuts
+        from .orbit_pipeline.ref import subround_ref
+        out = subround_ref(
+            hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq,
+            port, ts, table_hkeys, occupied, st_valid, st_version,
+            rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen,
+            front, rear, ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+            jnp.asarray(budget, jnp.int32),
+            queue_size=queue_size, max_frags=max_frags,
+            max_serves=max_serves)
+        return SubroundOuts(*out)
+    from .orbit_pipeline.ops import subround as _sr
+    return _sr(hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client,
+               seq, port, ts, table_hkeys, occupied, st_valid, st_version,
+               rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen,
+               front, rear, ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+               budget, queue_size, max_frags, max_serves,
+               block_b=block_b, interpret=(be == "interpret"))
 
 
 def cms_update_query(hkey, mask, counts, block_b: int = 256):

@@ -160,3 +160,301 @@ def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
         interpret=interpret,
     )(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear)
     return out[:9]  # the running attempt counts are kernel-internal
+
+
+# ---------------------------------------------------------------------------
+# subround: the FULL per-subround switch pass as one pallas_call
+# ---------------------------------------------------------------------------
+def _subround_kernel(
+    # per-lane tile inputs
+    hkey_ref, want_ref, wreq_ref, inst_ref, frag_ref, nfr_ref, kidx_ref,
+    vlen_ref, client_ref, seq_ref, port_ref, ts_ref,
+    # table inputs (resident, call-time state)
+    thk_ref, occ_ref, stv_ref, stver_ref,
+    rtc_in, rts_in, rtp_in, rtts_in, rta_in, rtk_in,
+    qlen_in, front_in, rear_in,
+    olive_in, okidx_in, over_in, ovlen_in, ofrags_in,
+    budget_ref,
+    # per-lane outputs
+    hit_o, vhit_o, acc_o, ovf_o,
+    # table outputs / accumulators
+    pop_o, stv_o, stver_o,
+    rtc_o, rts_o, rtp_o, rtts_o, rta_o, rtk_o,
+    qlen_o, front_o, rear_o,
+    olive_o, okidx_o, over_o, ovlen_o, ofrags_o,
+    vwr_o, vwn_o,
+    srv_o, gcl_o, gsq_o, gpt_o, gts_o, gkx_o,
+    lkx_o, lvl_o, lvr_o,
+    # kernel-internal accumulators (discarded by the wrapper)
+    wcnt_o, inv_o, val_o, newc_o,
+    *, queue_size: int, max_frags: int, max_serves: int, n_steps: int,
+):
+    """One VMEM pass per request tile over the WHOLE subround (Fig. 4).
+
+    Stages per tile (accumulated across the sequential grid like the
+    match+admission kernel above): 128-bit match + validity + popularity,
+    request-table admission AND metadata winner-gathers, the state-table
+    invalidate/validate one-hots, and the orbit-line install last-writer
+    reduction.  At the final grid step — once the whole batch has been
+    applied — the resident accumulators are finalized in place: state bits
+    resolved, installed lines stamped with the post-batch entry version,
+    liveness refreshed, the recirculation budget split over live lines, and
+    the request-table front slots gathered/popped into the serve grid.
+    Value bytes never enter: install winners leave as ``vwr``/``vwn`` for
+    the once-per-window byte apply.
+    """
+    step = pl.program_id(0)
+    s, f, j = queue_size, max_frags, max_serves
+    hk = hkey_ref[...]
+    tb = thk_ref[...]
+    occ = occ_ref[...]
+    stv_in = stv_ref[...]
+    tb_n = hk.shape[0]
+    c = tb.shape[0]
+    i32 = jnp.int32
+
+    # ---- match slice ------------------------------------------------------
+    eq = jnp.ones((tb_n, c), dtype=jnp.bool_)
+    for lane in range(4):
+        eq = eq & (hk[:, lane][:, None] == tb[:, lane][None, :])
+    eq = eq & (occ[None, :] > 0)
+    hit = jnp.any(eq, axis=1)
+    cidx = jnp.argmax(eq, axis=1).astype(i32)
+    safe = jnp.where(hit, cidx, 0)
+    entry_valid = (stv_in[safe] > 0) & hit
+    hit_o[...] = hit.astype(i32)
+    vhit_o[...] = entry_valid.astype(i32)
+
+    want = want_ref[...]
+    pop_delta = jnp.sum((eq & (want[:, None] > 0)).astype(i32), axis=0)
+
+    @pl.when(step == 0)
+    def _init():
+        # zero the running accumulators, seed the table outputs with the
+        # call-time state — later tiles overwrite their winner slots only.
+        pop_o[...] = jnp.zeros_like(pop_o)
+        wcnt_o[...] = jnp.zeros_like(wcnt_o)
+        inv_o[...] = jnp.zeros_like(inv_o)
+        val_o[...] = jnp.zeros_like(val_o)
+        newc_o[...] = jnp.zeros_like(newc_o)
+        vwr_o[...] = jnp.zeros_like(vwr_o)
+        vwn_o[...] = jnp.zeros_like(vwn_o)
+        stver_o[...] = stver_ref[...]
+        rtc_o[...] = rtc_in[...]
+        rts_o[...] = rts_in[...]
+        rtp_o[...] = rtp_in[...]
+        rtts_o[...] = rtts_in[...]
+        rta_o[...] = rta_in[...]
+        rtk_o[...] = rtk_in[...]
+        olive_o[...] = olive_in[...]
+        okidx_o[...] = okidx_in[...]
+        ovlen_o[...] = ovlen_in[...]
+        ofrags_o[...] = ofrags_in[...]
+
+    # ---- admission slice (cross-tile sequencing via wcnt) -----------------
+    qlen0 = qlen_in[...]
+    rear0 = rear_in[...]
+    want_enq = (want > 0) & hit & entry_valid
+    col = jax.lax.broadcasted_iota(i32, (tb_n, c), 1)
+    onehot = (col == safe[:, None]) & want_enq[:, None]
+    oh = onehot.astype(i32)
+    tile_prior = jnp.cumsum(oh, axis=0) - oh
+    running = wcnt_o[...]
+    offset = (jnp.sum(tile_prior * oh, axis=1)
+              + jnp.sum(oh * running[None, :], axis=1))
+    free_i = jnp.sum(oh * (s - qlen0)[None, :], axis=1)
+    rear_i = jnp.sum(oh * rear0[None, :], axis=1)
+    accepted = want_enq & (offset < free_i)
+    overflow = want_enq & ~accepted
+    acc_o[...] = accepted.astype(i32)
+    ovf_o[...] = overflow.astype(i32)
+
+    slot = (rear_i + offset) % s
+    flat = safe * s + slot
+    colcs = jax.lax.broadcasted_iota(i32, (tb_n, c * s), 1)
+    woh = (accepted[:, None] & (flat[:, None] == colcs)).astype(i32)
+    writ_t = jnp.any(woh > 0, axis=0)
+    gath = lambda v: jnp.sum(woh * v[:, None], axis=0)
+    rtc_o[...] = jnp.where(writ_t, gath(client_ref[...]), rtc_o[...])
+    rts_o[...] = jnp.where(writ_t, gath(seq_ref[...]), rts_o[...])
+    rtp_o[...] = jnp.where(writ_t, gath(port_ref[...]), rtp_o[...])
+    rtk_o[...] = jnp.where(writ_t, gath(kidx_ref[...]), rtk_o[...])
+    rta_o[...] = jnp.where(writ_t, 0, rta_o[...])
+    # ts is float: gather its bit pattern so the select stays exact
+    ts_bits = jax.lax.bitcast_convert_type(ts_ref[...], i32)
+    rtts_o[...] = jnp.where(
+        writ_t, jax.lax.bitcast_convert_type(gath(ts_bits), jnp.float32),
+        rtts_o[...])
+
+    pop_o[...] = pop_o[...] + pop_delta
+    newc_o[...] = newc_o[...] + jnp.sum(oh * accepted[:, None].astype(i32),
+                                        axis=0)
+    wcnt_o[...] = running + jnp.sum(oh, axis=0)
+
+    # ---- state-table one-hots (whole-batch apply, finalized at the end) ---
+    wreq = wreq_ref[...]
+    inst = inst_ref[...]
+    w_cached = (wreq > 0) & hit
+    install = (inst > 0) & hit
+    oh_inv = (col == safe[:, None]) & w_cached[:, None]
+    oh_val = (col == safe[:, None]) & install[:, None]
+    inv_o[...] = inv_o[...] | jnp.any(oh_inv, axis=0).astype(i32)
+    val_o[...] = val_o[...] | jnp.any(oh_val, axis=0).astype(i32)
+    stver_o[...] = stver_o[...] + jnp.sum(oh_inv.astype(i32), axis=0)
+
+    # ---- orbit-line install (last writer wins; later tiles override) ------
+    frag = frag_ref[...]
+    line = safe * f + jnp.clip(frag, 0, f - 1)
+    colcf = jax.lax.broadcasted_iota(i32, (tb_n, c * f), 1)
+    lh = install[:, None] & (line[:, None] == colcf)
+    lanes_cf = jax.lax.broadcasted_iota(i32, (tb_n, c * f), 0)
+    win_rel = jnp.max(jnp.where(lh, lanes_cf, -1), axis=0)
+    written_t = win_rel >= 0
+    sel = (lh & (lanes_cf == win_rel[None, :])).astype(i32)
+    lgath = lambda v: jnp.sum(sel * v[:, None], axis=0)
+    okidx_o[...] = jnp.where(written_t, lgath(kidx_ref[...]), okidx_o[...])
+    ovlen_o[...] = jnp.where(written_t, lgath(vlen_ref[...]), ovlen_o[...])
+    vwr_o[...] = jnp.where(written_t, win_rel + step * tb_n, vwr_o[...])
+    vwn_o[...] = vwn_o[...] | written_t.astype(i32)
+    olive_o[...] = olive_o[...] | written_t.astype(i32)
+
+    ehm = install & (frag == 0)
+    eh = ehm[:, None] & (col == safe[:, None])
+    lanes_c = jax.lax.broadcasted_iota(i32, (tb_n, c), 0)
+    win_e = jnp.max(jnp.where(eh, lanes_c, -1), axis=0)
+    sel_e = (eh & (lanes_c == win_e[None, :])).astype(i32)
+    nf_g = jnp.sum(sel_e * jnp.maximum(nfr_ref[...], 1)[:, None], axis=0)
+    ofrags_o[...] = jnp.where(win_e >= 0, nf_g, ofrags_o[...])
+
+    # ---- serving round: finalize once the whole batch is in ---------------
+    @pl.when(step == n_steps - 1)
+    def _serve():
+        stv_f = (((stv_in > 0) & (inv_o[...] == 0)) | (val_o[...] > 0))
+        stv_o[...] = stv_f.astype(i32)
+        stver_f = stver_o[...]
+
+        # installed lines carry the post-batch entry version ([C, F] view)
+        vw2 = (vwn_o[...] > 0).reshape(c, f)
+        over2 = jnp.where(vw2, stver_f[:, None], over_in[...].reshape(c, f))
+        over_o[...] = over2.reshape(c * f)
+
+        # drop-stale refresh + per-entry recirculation budget
+        live2 = olive_o[...].reshape(c, f) > 0
+        ok2 = ((occ > 0)[:, None] & stv_f[:, None]
+               & (over2 == stver_f[:, None]) & live2)
+        olive_o[...] = ok2.reshape(c * f).astype(i32)
+        n_live = jnp.maximum(jnp.sum(ok2.astype(i32)), 1)
+        per_line = budget_ref[0] // n_live
+        complete = jnp.sum(ok2.astype(i32), axis=1) >= ofrags_o[...]
+        budget_c = jnp.where(complete, per_line, 0).astype(i32)
+
+        newc = newc_o[...]
+        qlen2 = qlen0 + newc
+        rear_o[...] = (rear0 + newc) % s
+
+        jj = jax.lax.broadcasted_iota(i32, (c, j), 1)
+        n_serve = jnp.minimum(qlen2, budget_c)
+        served = jj < n_serve[:, None]
+        srv_o[...] = served.astype(i32)
+        front0 = front_in[...]
+        slot_g = (front0[:, None] + jj) % s
+        take = lambda ref: jnp.take_along_axis(
+            ref[...].reshape(c, s), slot_g, axis=1)
+        gcl_o[...] = take(rtc_o)
+        gsq_o[...] = take(rts_o)
+        gpt_o[...] = take(rtp_o)
+        gts_o[...] = take(rtts_o)
+        gkx_o[...] = take(rtk_o)
+
+        n_pop = jnp.sum(served.astype(i32), axis=1)
+        qlen_o[...] = qlen2 - n_pop
+        front_o[...] = (front0 + n_pop) % s
+
+        lkx_o[...] = okidx_o[...].reshape(c, f)[:, 0]
+        lvl_o[...] = jnp.sum(ovlen_o[...].reshape(c, f), axis=1)
+        lvr_o[...] = over2[:, 0]
+
+
+@partial(jax.jit, static_argnames=("queue_size", "max_frags", "max_serves",
+                                   "block_b", "interpret"))
+def subround(
+    hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port, ts,
+    table_hkeys, occupied, st_valid, st_version,
+    rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front, rear,
+    ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+    budget,
+    *, queue_size: int, max_frags: int, max_serves: int,
+    block_b: int = 128, interpret: bool = True,
+):
+    """Full fused subround (see ``_subround_kernel``).  B % block_b == 0.
+
+    Returns the 32 arrays of ``ops.SubroundOuts`` (the four trailing
+    kernel-internal accumulators are dropped here).
+    """
+    b = hkey.shape[0]
+    c = table_hkeys.shape[0]
+    s, f, j = queue_size, max_frags, max_serves
+    n_steps = b // block_b
+    ent = lambda i: (0,)
+    lane = lambda i: (i,)
+    ent2 = lambda i: (0, 0)
+    i32 = jnp.int32
+    lane_spec = pl.BlockSpec((block_b,), lane)
+    c_spec = pl.BlockSpec((c,), ent)
+    cs_spec = pl.BlockSpec((c * s,), ent)
+    cf_spec = pl.BlockSpec((c * f,), ent)
+    cj_spec = pl.BlockSpec((c, j), ent2)
+    out = pl.pallas_call(
+        partial(_subround_kernel, queue_size=s, max_frags=f, max_serves=j,
+                n_steps=n_steps),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),      # hkey
+            *([lane_spec] * 10),   # want wreq inst frag nfrags kidx vlen
+                                   # client seq port
+            lane_spec,             # ts
+            pl.BlockSpec((c, 4), lambda i: (0, 0)),            # table hkeys
+            *([c_spec] * 3),       # occ, st_valid, st_version
+            *([cs_spec] * 6),      # rt client/seq/port/ts/acked/kidx
+            *([c_spec] * 3),       # qlen, front, rear
+            *([cf_spec] * 4),      # orbit live/kidx/version/vlen
+            c_spec,                # frags
+            pl.BlockSpec((1,), ent),                           # budget
+        ],
+        out_specs=[
+            *([lane_spec] * 4),    # hit, vhit, accepted, overflow
+            *([c_spec] * 3),       # pop, st_valid, st_version
+            *([cs_spec] * 6),      # rt client/seq/port/ts/acked/kidx
+            *([c_spec] * 3),       # qlen, front, rear
+            *([cf_spec] * 4),      # orbit live/kidx/version/vlen
+            c_spec,                # frags
+            *([cf_spec] * 2),      # val_writer, val_written
+            *([cj_spec] * 6),      # served + grid client/seq/port/ts/kidx
+            *([c_spec] * 3),       # line kidx/vlen/version
+            *([c_spec] * 4),       # wcnt, inv, val, newc (internal)
+        ],
+        out_shape=[
+            *[jax.ShapeDtypeStruct((b,), i32)] * 4,
+            *[jax.ShapeDtypeStruct((c,), i32)] * 3,
+            jax.ShapeDtypeStruct((c * s,), i32),
+            jax.ShapeDtypeStruct((c * s,), i32),
+            jax.ShapeDtypeStruct((c * s,), i32),
+            jax.ShapeDtypeStruct((c * s,), jnp.float32),
+            jax.ShapeDtypeStruct((c * s,), i32),
+            jax.ShapeDtypeStruct((c * s,), i32),
+            *[jax.ShapeDtypeStruct((c,), i32)] * 3,
+            *[jax.ShapeDtypeStruct((c * f,), i32)] * 4,
+            jax.ShapeDtypeStruct((c,), i32),
+            *[jax.ShapeDtypeStruct((c * f,), i32)] * 2,
+            *[jax.ShapeDtypeStruct((c, j), i32)] * 4,
+            jax.ShapeDtypeStruct((c, j), jnp.float32),
+            jax.ShapeDtypeStruct((c, j), i32),
+            *[jax.ShapeDtypeStruct((c,), i32)] * 3,
+            *[jax.ShapeDtypeStruct((c,), i32)] * 4,
+        ],
+        interpret=interpret,
+    )(hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port,
+      ts, table_hkeys, occupied, st_valid, st_version,
+      rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front,
+      rear, ob_live, ob_kidx, ob_version, ob_vlen, ob_frags, budget)
+    return out[:32]

@@ -2,11 +2,14 @@
 hardware alignment, picks interpret mode off-TPU, unpads results."""
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
 from .kernel import orbit_pipeline as _kernel
-from .ref import orbit_pipeline_ref  # noqa: F401  (re-exported oracle)
+from .kernel import subround as _subround_kernel
+from .ref import orbit_pipeline_ref, subround_ref  # noqa: F401  (oracles)
 
 
 def _on_tpu() -> bool:
@@ -41,3 +44,110 @@ def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
     return (cidx[:b], hit[:b], vhit[:b], pop[:c],
             acc[:b].astype(bool), ovf[:b].astype(bool), newc[:c],
             writer[:c * s], written[:c * s].astype(bool))
+
+
+class SubroundOuts(NamedTuple):
+    """Outputs of the full fused subround op (all call-time-state shapes).
+
+    Per-lane decisions come back for routing/stats (pure reductions in
+    ``core.pipeline``); every switch table returns fully updated — admission
+    metadata applied, state bits resolved, orbit lines installed and
+    liveness-refreshed, served front slots popped; the serve grid carries
+    the requests answered by orbit lines this round; ``val_writer`` /
+    ``val_written`` are the deferred value-byte install winners.
+    """
+
+    hit: jnp.ndarray          # int32[B]
+    vhit: jnp.ndarray         # int32[B]
+    accepted: jnp.ndarray     # int32[B]
+    overflow: jnp.ndarray     # int32[B]
+    pop: jnp.ndarray          # int32[C]
+    st_valid: jnp.ndarray     # int32[C]
+    st_version: jnp.ndarray   # int32[C]
+    rt_client: jnp.ndarray    # int32[C*S]
+    rt_seq: jnp.ndarray       # int32[C*S]
+    rt_port: jnp.ndarray      # int32[C*S]
+    rt_ts: jnp.ndarray        # float32[C*S]
+    rt_acked: jnp.ndarray     # int32[C*S]
+    rt_kidx: jnp.ndarray      # int32[C*S]
+    qlen: jnp.ndarray         # int32[C]
+    front: jnp.ndarray        # int32[C]
+    rear: jnp.ndarray         # int32[C]
+    ob_live: jnp.ndarray      # int32[C*F]
+    ob_kidx: jnp.ndarray      # int32[C*F]
+    ob_version: jnp.ndarray   # int32[C*F]
+    ob_vlen: jnp.ndarray      # int32[C*F]
+    ob_frags: jnp.ndarray     # int32[C]
+    val_writer: jnp.ndarray   # int32[C*F]
+    val_written: jnp.ndarray  # int32[C*F]
+    served: jnp.ndarray       # int32[C, J]
+    g_client: jnp.ndarray     # int32[C, J]
+    g_seq: jnp.ndarray        # int32[C, J]
+    g_port: jnp.ndarray       # int32[C, J]
+    g_ts: jnp.ndarray         # float32[C, J]
+    g_kidx: jnp.ndarray       # int32[C, J]
+    line_kidx: jnp.ndarray    # int32[C]
+    line_vlen: jnp.ndarray    # int32[C]
+    line_version: jnp.ndarray # int32[C]
+
+
+def subround(
+    hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port, ts,
+    table_hkeys, occupied, st_valid, st_version,
+    rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front, rear,
+    ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+    budget,
+    queue_size: int, max_frags: int, max_serves: int,
+    block_b: int = 128, interpret: bool | None = None,
+) -> SubroundOuts:
+    """Padded public wrapper for the full subround kernel.  Any B, any C.
+
+    Pad lanes carry zeroed gate masks (no admission / state / install
+    contribution) and pad entries are unoccupied with empty queues and no
+    live lines, so neither can perturb the accumulators, the liveness
+    count, or the per-entry serve budget; results are sliced back to the
+    caller's shapes.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b = hkey.shape[0]
+    c = table_hkeys.shape[0]
+    s, f, j = queue_size, max_frags, max_serves
+    block_b = min(block_b, max(8, b))
+    pad_b = (-b) % block_b
+    pad_c = (-c) % 128 if c % 128 else 0
+    if pad_b:
+        z = lambda a: jnp.pad(a, (0, pad_b))
+        hkey = jnp.pad(hkey, ((0, pad_b), (0, 0)))
+        want, wreq, inst = z(want), z(wreq), z(inst)
+        frag, nfrags, kidx, vlen = z(frag), z(nfrags), z(kidx), z(vlen)
+        client, seq, port, ts = z(client), z(seq), z(port), z(ts)
+    if pad_c:
+        zc = lambda a: jnp.pad(a, (0, pad_c))
+        pad_rows = lambda a, w: jnp.pad(
+            a.reshape(c, w), ((0, pad_c), (0, 0))).reshape((c + pad_c) * w)
+        table_hkeys = jnp.pad(table_hkeys, ((0, pad_c), (0, 0)))
+        occupied, st_valid, st_version = zc(occupied), zc(st_valid), zc(st_version)
+        rt_client, rt_seq, rt_port = (pad_rows(rt_client, s),
+                                      pad_rows(rt_seq, s), pad_rows(rt_port, s))
+        rt_ts, rt_acked, rt_kidx = (pad_rows(rt_ts, s), pad_rows(rt_acked, s),
+                                    pad_rows(rt_kidx, s))
+        qlen, front, rear = zc(qlen), zc(front), zc(rear)
+        ob_live, ob_kidx = pad_rows(ob_live, f), pad_rows(ob_kidx, f)
+        ob_version, ob_vlen = pad_rows(ob_version, f), pad_rows(ob_vlen, f)
+        ob_frags = zc(ob_frags)
+    out = _subround_kernel(
+        hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port,
+        ts, table_hkeys, occupied, st_valid, st_version,
+        rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front,
+        rear, ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+        jnp.asarray(budget, jnp.int32).reshape(1),
+        queue_size=s, max_frags=f, max_serves=j,
+        block_b=block_b, interpret=interpret,
+    )
+    o = SubroundOuts(*out)
+    cut = {1: lambda a: a[:b], 2: lambda a: a[:c], 3: lambda a: a[:c * s],
+           4: lambda a: a[:c * f], 5: lambda a: a[:c]}
+    kinds = (1, 1, 1, 1, 2, 2, 2, 3, 3, 3, 3, 3, 3, 2, 2, 2,
+             4, 4, 4, 4, 2, 4, 4, 5, 5, 5, 5, 5, 5, 2, 2, 2)
+    return SubroundOuts(*(cut[k](a) for k, a in zip(kinds, o)))

@@ -75,3 +75,128 @@ def orbit_pipeline_ref(hkey, table_hkeys, occupied, valid, want_mask,
         writer,
         written,
     )
+
+
+def subround_ref(
+    # per-lane [B] (masks already gated by lane validity; see kernels doc)
+    hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port, ts,
+    # tables (call-time state)
+    table_hkeys, occupied, st_valid, st_version,
+    rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen, front, rear,
+    ob_live, ob_kidx, ob_version, ob_vlen, ob_frags,
+    budget,
+    *, queue_size: int, max_frags: int, max_serves: int,
+):
+    """Pure-jnp oracle for the full fused subround (paper Fig. 4, one pass).
+
+    The whole per-subround switch pass as one function: the
+    ``orbit_pipeline_ref`` match + admission slice, PLUS
+
+      * the request-table metadata apply (``rt.apply_winners``'s winner
+        gathers and queue-pointer bump);
+      * the state-table invalidate/validate one-hot pass
+        (``stt.apply_batch``: write invalidations, then reply validations,
+        both over the whole batch);
+      * the orbit-line metadata install (``ob.install_lines_meta``'s
+        last-writer reduction; value bytes stay OUT — the winners come back
+        as ``val_writer``/``val_written`` for the per-window apply);
+      * the orbit serving round (``ob.orbit_pass``: liveness refresh against
+        the post-batch state, recirculation-budget split over live lines,
+        ``rt.peek_front`` front-gathers, and the served-entry dequeue).
+
+    Math is kept term-for-term identical to those oracles so the composed
+    path, this ref, and the Pallas kernel agree bit-for-bit.  Returns the 32
+    arrays listed in ``ops.SubroundOuts`` (same order).
+    """
+    c = table_hkeys.shape[0]
+    s = queue_size
+    f = max_frags
+    j = max_serves
+
+    # ---- match + admission: THE one oracle, not a copy of it --------------
+    cidx_m, khit, kvhit, pop, accepted, overflow, new_counts, writer, \
+        written = orbit_pipeline_ref(hkey, table_hkeys, occupied, st_valid,
+                                     want, qlen, rear, s)
+    hit = khit > 0
+    entry_valid = kvhit > 0
+    safe = jnp.where(hit, cidx_m, 0)
+
+    # ---- request-table metadata apply (rt.apply_winners) ------------------
+    put = lambda arr, src: jnp.where(written, src[writer], arr)
+    rt_client2 = put(rt_client, client)
+    rt_seq2 = put(rt_seq, seq)
+    rt_port2 = put(rt_port, port)
+    rt_ts2 = put(rt_ts, ts)
+    rt_acked2 = put(rt_acked, jnp.zeros_like(seq))
+    rt_kidx2 = put(rt_kidx, kidx)
+    qlen2 = qlen + new_counts
+    rear2 = (rear + new_counts) % s
+
+    # ---- state table: invalidations then validations (stt.apply_batch) ----
+    w_cached = (wreq > 0) & hit
+    install = (inst > 0) & hit
+    cols = jnp.arange(c)[None, :]
+    oh_inv = w_cached[:, None] & (safe[:, None] == cols)
+    oh_val = install[:, None] & (safe[:, None] == cols)
+    bump = jnp.sum(oh_inv.astype(jnp.int32), axis=0)
+    stv2 = ((st_valid > 0) & ~jnp.any(oh_inv, axis=0)) | jnp.any(oh_val, axis=0)
+    stver2 = st_version + bump
+
+    # ---- orbit-line metadata install (ob.install_lines_meta) --------------
+    lanes = jnp.arange(hkey.shape[0], dtype=jnp.int32)
+    line = safe * f + jnp.clip(frag, 0, f - 1)
+    lh = install[:, None] & (line[:, None] == jnp.arange(c * f)[None, :])
+    lwriter = jnp.argmax(jnp.where(lh, lanes[:, None], -1), axis=0)
+    lwritten = jnp.any(lh, axis=0)
+    eh = (install & (frag == 0))[:, None] & (safe[:, None] == cols)
+    ewriter = jnp.argmax(jnp.where(eh, lanes[:, None], -1), axis=0)
+    ewritten = jnp.any(eh, axis=0)
+
+    inst_version = stver2[safe]  # version AFTER the whole batch's writes
+    pick = lambda arr, src: jnp.where(lwritten, src[lwriter], arr)
+    olive2 = (ob_live > 0) | lwritten
+    okidx2 = pick(ob_kidx, kidx)
+    over2 = pick(ob_version, inst_version)
+    ovlen2 = pick(ob_vlen, vlen)
+    ofrags2 = jnp.where(ewritten, jnp.maximum(nfrags, 1)[ewriter], ob_frags)
+
+    # ---- serving round (ob.orbit_pass) ------------------------------------
+    ent = jnp.repeat(jnp.arange(c), f)
+    live3 = (occupied[ent] > 0) & stv2[ent] & (over2 == stver2[ent]) & olive2
+    n_live = jnp.maximum(jnp.sum(live3.astype(jnp.int32)), 1)
+    per_line = budget // n_live
+    live_frag_count = jnp.sum(live3.reshape(c, f).astype(jnp.int32), axis=1)
+    complete = live_frag_count >= ofrags2
+    budget_c = jnp.where(complete, per_line, 0).astype(jnp.int32)
+
+    jj = jnp.arange(j)[None, :]
+    n_serve = jnp.minimum(qlen2, budget_c)
+    served = jj < n_serve[:, None]
+    slot_g = (front[:, None] + jj) % s
+    flat_g = jnp.arange(c)[:, None] * s + slot_g
+    g_client = rt_client2[flat_g]
+    g_seq = rt_seq2[flat_g]
+    g_port = rt_port2[flat_g]
+    g_ts = rt_ts2[flat_g]
+    g_kidx = rt_kidx2[flat_g]
+
+    n_pop = jnp.sum(served.astype(jnp.int32), axis=1)
+    qlen3 = qlen2 - n_pop
+    front2 = (front + n_pop) % s
+
+    first = jnp.arange(c) * f
+    line_kidx = okidx2[first]
+    line_vlen = jnp.sum(ovlen2.reshape(c, f), axis=1)
+    line_version = over2[first]
+
+    i32 = lambda x: x.astype(jnp.int32)
+    return (
+        i32(hit), i32(entry_valid), i32(accepted), i32(overflow), pop,
+        i32(stv2), stver2,
+        rt_client2, rt_seq2, rt_port2, rt_ts2, rt_acked2, rt_kidx2,
+        qlen3, front2, rear2,
+        i32(live3), okidx2, over2, ovlen2, ofrags2,
+        lwriter.astype(jnp.int32), i32(lwritten),
+        i32(served), g_client, g_seq, g_port, g_ts, g_kidx,
+        line_kidx, line_vlen, line_version,
+    )

@@ -18,6 +18,12 @@ Workload arrays are stacked per-leaf only where points actually differ;
 leaves shared by every point (e.g. the rank permutation in a skew sweep,
 or everything in a load sweep) are passed unbatched (``in_axes=None``) so
 a 16-point sweep over a 10M-key workload does not hold 16 copies of it.
+
+Under vmap the orbitcache pass stays one fused ``kernels.subround`` call
+per subround (batched over the rack axis), and the batched orbit value
+buffers update by per-window winner scatters on the donated chunk carry —
+untouched rows of the ``[N, C*F, value_pad]`` byte stack are never
+rewritten between windows.
 """
 from __future__ import annotations
 

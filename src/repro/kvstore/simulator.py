@@ -29,6 +29,13 @@ workload arrays are explicit jit arguments (host-side churn needs no
 retrace) and the same compiled chunk is shared by every simulator with the
 same static config — including the vmapped multi-rack sweeps in
 ``repro.kvstore.fleet``.
+
+The orbitcache switch pass is ONE fused ``kernels.subround`` op per
+subround (a single ``pallas_call`` on the kernel backends); the orbit
+value buffer rides the window scan carry and is updated by a row scatter
+of each window's install winners — with the chunk carry donated, XLA
+applies it in place, so untouched ``[C*F, value_pad]`` bytes are never
+copied window to window.
 """
 from __future__ import annotations
 
@@ -206,6 +213,34 @@ def build_fetch_batch(cfg: RackConfig, vlen_table: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # the window step (pure; shared by serial and batched simulators)
 # ---------------------------------------------------------------------------
+def generate_ingress(
+    cfg: RackConfig,
+    client_cfg: cl.ClientConfig,
+    wl: WorkloadArrays,
+    carry: SimCarry,
+):
+    """Draw this window's client batch and assemble the switch ingress.
+
+    Every source is already subround-major [R, L], so assembly is a single
+    lane-axis concat (client requests + pending server replies +
+    controller F-REQs — no per-window transposes of value payloads).
+    Shared by :func:`window_step` and the perf-smoke stage breakdown so
+    the timed stages can never drift from the production input pipeline.
+    Returns ``(rng', clients', reqs, sub)``.
+    """
+    rng, r_gen = jax.random.split(carry.rng)
+    clients, reqs = cl.generate(
+        carry.clients, client_cfg, r_gen,
+        wl.cdf, wl.perm, wl.vlen,
+        carry.offered, carry.write_ratio, cfg.num_servers, carry.now,
+    )
+    sub = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=1), reqs, carry.pending,
+        carry.fetch,
+    )
+    return rng, clients, reqs, sub
+
+
 def window_step(
     cfg: RackConfig,
     server_cfg: ServerConfig,
@@ -216,24 +251,14 @@ def window_step(
     _=None,
 ) -> tuple[SimCarry, WindowMetrics]:
     c = cfg
-    rng, r_gen = jax.random.split(carry.rng)
-    clients, reqs = cl.generate(
-        carry.clients, client_cfg, r_gen,
-        wl.cdf, wl.perm, wl.vlen,
-        carry.offered, carry.write_ratio, c.num_servers, carry.now,
-    )
-    # Every source is already subround-major [R, L]; ingress assembly is a
-    # single lane-axis concat (no per-window transposes of value payloads).
-    sub = jax.tree.map(
-        lambda *xs: jnp.concatenate(xs, axis=1), reqs, carry.pending,
-        carry.fetch,
-    )
+    rng, clients, reqs, sub = generate_ingress(cfg, client_cfg, wl, carry)
     pad_to = sub.op.shape[0] * sub.op.shape[1]
 
     window = jnp.float32(c.window_us)
     if c.scheme == "orbitcache":
-        # One kernel-backed fused pass per subround; orbit value bytes stay
-        # out of the scan carry and install once per window (core.pipeline).
+        # The whole subround is one fused kernel call (single pallas_call on
+        # the kernel backends); orbit value bytes stay out of the scan carry
+        # and scatter-install once per window (core.pipeline).
         policy, outs, intervals = pipeline.window_pipeline(
             carry.policy, sub,
             recirc_gbps=c.recirc_gbps, window_us=c.window_us,

@@ -332,3 +332,168 @@ def test_dispatch_matches_oracles_on_all_backends():
                 np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
         finally:
             kernels.set_kernel_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# subround: the FULL fused per-subround pass (match + admission + state +
+# install + serving round)
+# ---------------------------------------------------------------------------
+def _subround_case(b, c, s, f, budget):
+    """Random-but-consistent full-subround inputs (hit-heavy traffic)."""
+    keys = jnp.asarray(RNG.choice(2000, c, replace=False), jnp.int32)
+    q = jnp.asarray(RNG.choice(np.asarray(keys), b), jnp.int32)
+    front = jnp.asarray(RNG.integers(0, s, c), jnp.int32)
+    qlen = jnp.asarray(RNG.integers(0, s + 1, c), jnp.int32)
+    return (
+        hash128_u32(q),                                            # hkey
+        jnp.asarray(RNG.integers(0, 2, b), jnp.int32),             # want
+        jnp.asarray((RNG.integers(0, 4, b) == 0), jnp.int32),      # wreq
+        jnp.asarray((RNG.integers(0, 4, b) == 1), jnp.int32),      # inst
+        jnp.asarray(RNG.integers(0, f + 1, b), jnp.int32),         # frag
+        jnp.asarray(RNG.integers(1, f + 1, b), jnp.int32),         # nfrags
+        q,                                                         # kidx
+        jnp.asarray(RNG.integers(1, 100, b), jnp.int32),           # vlen
+        jnp.asarray(RNG.integers(0, 8, b), jnp.int32),             # client
+        jnp.arange(b, dtype=jnp.int32),                            # seq
+        jnp.asarray(RNG.integers(0, 100, b), jnp.int32),           # port
+        jnp.asarray(RNG.random(b), jnp.float32),                   # ts
+        hash128_u32(keys),                                         # table
+        jnp.asarray(RNG.integers(0, 2, c), jnp.int32),             # occupied
+        jnp.asarray(RNG.integers(0, 2, c), jnp.int32),             # st_valid
+        jnp.asarray(RNG.integers(0, 5, c), jnp.int32),             # st_version
+        jnp.asarray(RNG.integers(-1, 8, c * s), jnp.int32),        # rt_client
+        jnp.asarray(RNG.integers(0, 99, c * s), jnp.int32),        # rt_seq
+        jnp.asarray(RNG.integers(0, 99, c * s), jnp.int32),        # rt_port
+        jnp.asarray(RNG.random(c * s), jnp.float32),               # rt_ts
+        jnp.zeros(c * s, jnp.int32),                               # rt_acked
+        jnp.asarray(RNG.integers(-1, 2000, c * s), jnp.int32),     # rt_kidx
+        qlen, front, (front + qlen) % s,                           # q/f/rear
+        jnp.asarray(RNG.integers(0, 2, c * f), jnp.int32),         # ob_live
+        jnp.asarray(RNG.integers(-1, 2000, c * f), jnp.int32),     # ob_kidx
+        jnp.asarray(RNG.integers(0, 5, c * f), jnp.int32),         # ob_version
+        jnp.asarray(RNG.integers(0, 100, c * f), jnp.int32),       # ob_vlen
+        jnp.asarray(RNG.integers(1, f + 1, c), jnp.int32),         # ob_frags
+        jnp.int32(budget),
+    )
+
+
+@pytest.mark.parametrize("b,c,s,f,j,block,budget", [
+    (24, 8, 4, 1, 4, 8, 100),     # multi-tile, generous budget
+    (64, 16, 8, 2, 8, 32, 7),     # multi-fragment lines, tight budget
+    (17, 5, 3, 2, 4, 8, 0),       # batch pad + zero recirculation budget
+    (300, 130, 8, 1, 8, 64, 25),  # C > 128 (table pad)
+])
+def test_subround_kernel_matches_oracle(b, c, s, f, j, block, budget):
+    from repro.kernels.orbit_pipeline.ops import SubroundOuts
+    from repro.kernels.orbit_pipeline.ops import subround as subround_op
+    from repro.kernels.orbit_pipeline.ref import subround_ref
+
+    args = _subround_case(b, c, s, f, budget)
+    want = SubroundOuts(*subround_ref(
+        *args, queue_size=s, max_frags=f, max_serves=j))
+    got = subround_op(*args, s, f, j, block_b=block, interpret=True)
+    for name, g, w in zip(SubroundOuts._fields, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(w),
+            err_msg=f"{name} (b={b}, c={c}, s={s}, f={f}, j={j})")
+
+
+def test_subround_dispatch_matches_oracle_on_all_backends():
+    from repro.kernels.orbit_pipeline.ops import SubroundOuts
+    from repro.kernels.orbit_pipeline.ref import subround_ref
+
+    b, c, s, f, j = 40, 16, 4, 2, 4
+    args = _subround_case(b, c, s, f, 11)
+    want = SubroundOuts(*subround_ref(
+        *args, queue_size=s, max_frags=f, max_serves=j))
+    for be in ("ref", "interpret"):
+        kernels.set_kernel_backend(be)
+        try:
+            got = kernels.subround(*args, s, f, j)
+            for name, g, w in zip(SubroundOuts._fields, got, want):
+                np.testing.assert_array_equal(
+                    np.asarray(g), np.asarray(w),
+                    err_msg=f"{name} (backend={be})")
+        finally:
+            kernels.set_kernel_backend(None)
+
+
+def test_subround_ref_matches_composed_oracles():
+    """The fused subround oracle == the free-standing core oracles composed
+    (enqueue/apply_winners + apply_batch + install_lines_meta + orbit_pass
+    over a hand-built PipelineCarry)."""
+    from repro.core import orbit as ob
+    from repro.core import request_table as rt
+    from repro.core import state_table as stt
+    from repro.core.types import (OrbitMeta, RequestTable, StateTable)
+    from repro.kernels.orbit_pipeline.ops import SubroundOuts
+    from repro.kernels.orbit_pipeline.ref import subround_ref
+
+    b, c, s, f, j = 48, 8, 4, 2, 4
+    args = _subround_case(b, c, s, f, 13)
+    (hq, want, wreq, inst, frag, nfr, kidx, vlen, client, seq, port, ts,
+     thk, occ, stv, stver, rtc, rtseq, rtp, rtts, rta, rtk, qlen, front,
+     rear, olive, okidx, over, ovlen, ofr, budget) = args
+    got = SubroundOuts(*subround_ref(*args, queue_size=s, max_frags=f,
+                                     max_serves=j))
+
+    # compose the oracles
+    from repro.kernels.orbit_match.ref import orbit_match_ref
+    cidx, hit, vhit, pop = orbit_match_ref(hq, thk, occ, stv, want)
+    np.testing.assert_array_equal(np.asarray(got.pop), np.asarray(pop))
+    hitb = hit > 0
+    safe = jnp.where(hitb, cidx, 0)
+    tbl = RequestTable(client=rtc, seq=rtseq, port=rtp, ts=rtts, acked=rta,
+                       kidx=rtk, qlen=qlen, front=front, rear=rear)
+    enq = rt.enqueue(tbl, safe, (want > 0) & hitb & (vhit > 0),
+                     client, seq, port, ts, kidx=kidx)
+    st2 = stt.apply_batch(StateTable(valid=stv > 0, version=stver), safe,
+                          (wreq > 0) & hitb, (inst > 0) & hitb)
+    meta, writer, written = ob.install_lines_meta(
+        OrbitMeta(live=olive > 0, kidx=okidx, version=over, vlen=ovlen,
+                  frags=ofr),
+        safe, (inst > 0) & hitb, kidx, st2.version[safe], vlen,
+        frag=frag, n_frags=jnp.maximum(nfr, 1))
+    np.testing.assert_array_equal(np.asarray(got.accepted),
+                                  np.asarray(enq.accepted).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.val_writer),
+                                  np.asarray(writer))
+    np.testing.assert_array_equal(np.asarray(got.val_written),
+                                  np.asarray(written).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.st_valid),
+                                  np.asarray(st2.valid).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.st_version),
+                                  np.asarray(st2.version))
+
+    # serving round on the updated tables
+    from repro.core.types import SwitchState, LookupTable, Counters, OrbitBuffer
+    swst = SwitchState(
+        lookup=LookupTable(hkeys=thk, occupied=occ > 0,
+                           kidx=jnp.full((c,), -1, jnp.int32)),
+        state=st2,
+        reqtab=enq.table,
+        orbit=OrbitBuffer(live=meta.live, kidx=meta.kidx,
+                          version=meta.version, vlen=meta.vlen,
+                          val=jnp.zeros((c * f, 8), jnp.uint8),
+                          frags=meta.frags),
+        counters=Counters(popularity=jnp.zeros((c,), jnp.uint32),
+                          hits=jnp.zeros((), jnp.uint32),
+                          overflow=jnp.zeros((), jnp.uint32),
+                          cached_reqs=jnp.zeros((), jnp.uint32)),
+    )
+    sw2, grid = ob.orbit_pass(swst, budget, j)
+    np.testing.assert_array_equal(np.asarray(got.served),
+                                  np.asarray(grid.served).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.g_client),
+                                  np.asarray(grid.client))
+    np.testing.assert_array_equal(np.asarray(got.g_ts), np.asarray(grid.ts))
+    np.testing.assert_array_equal(np.asarray(got.line_vlen),
+                                  np.asarray(grid.vlen))
+    np.testing.assert_array_equal(np.asarray(got.line_version),
+                                  np.asarray(grid.version))
+    np.testing.assert_array_equal(np.asarray(got.qlen),
+                                  np.asarray(sw2.reqtab.qlen))
+    np.testing.assert_array_equal(np.asarray(got.front),
+                                  np.asarray(sw2.reqtab.front))
+    np.testing.assert_array_equal(np.asarray(got.ob_live),
+                                  np.asarray(sw2.orbit.live).astype(np.int32))

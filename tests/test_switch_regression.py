@@ -3,8 +3,10 @@
 The seed implementation did the lookup with ``lookup.lookup`` (pure [B, C]
 compare), a separate validity check, a scatter-add popularity update, and a
 free-standing ``rt.enqueue``; PR 1 fused the lookup slice into the
-``orbit_match`` kernel; this PR fuses the whole pass (match + admission +
-state + install winners) into ``kernels.orbit_pipeline`` behind
+``orbit_match`` kernel; PR 2 fused match + admission into
+``kernels.orbit_pipeline``; this PR folds the ENTIRE subround — match,
+admission + metadata apply, state-table pass, orbit install, serving round
+— into ``kernels.subround``, a single ``pallas_call`` behind
 ``core.pipeline``, with orbit value bytes hoisted out of the per-subround
 scan.  These tests replay traffic through the seed-composed and fused
 implementations and assert bit-identical outputs and state:
@@ -14,8 +16,11 @@ implementations and assert bit-identical outputs and state:
   * per window (``window_step`` vs a PR-1-style composed window that scans
     the full SwitchState and installs value bytes eagerly), for all three
     schemes;
-  * and the per-subround scan carry is checked to carry no orbit value
-    bytes (the hoist is structural, not incidental).
+  * per subround edge case (zero recirculation budget, full request-table
+    queues, multi-fragment lines, all-invalid ingress), on both backends;
+  * structurally: the per-subround scan carry holds no orbit value bytes,
+    the subround traces exactly ONE pallas_call on the kernel backends,
+    and the running counters saturate instead of wrapping.
 """
 import jax
 import jax.numpy as jnp
@@ -33,7 +38,7 @@ from repro.core.controller import CacheController, ControllerConfig
 from repro.core.hashing import hash128_u32
 from repro.core.types import (
     OP_CRN_REQ, OP_F_REP, OP_R_REQ, OP_W_REP, OP_W_REQ, Counters, PacketBatch,
-    SwitchState, empty_batch, init_switch_state,
+    SwitchState, empty_batch, init_switch_state, sat_add,
 )
 from repro.kvstore.store import synth_value
 
@@ -84,11 +89,13 @@ def _seed_switch_step(sw, pkts, recirc_packets, max_serves):
         pkts.vlen, pkts.val, frag=frag, n_frags=jnp.maximum(pkts.flag, 1),
     )
 
+    # running counters accumulate wrap-safe (uint32 saturating) in both the
+    # composed and fused paths — part of the counter-overflow fix
     counters = Counters(
         popularity=popularity,
-        hits=sw.counters.hits + n_hit,
-        overflow=sw.counters.overflow + n_overflow + n_invalid_fwd,
-        cached_reqs=sw.counters.cached_reqs + n_hit,
+        hits=sat_add(sw.counters.hits, n_hit),
+        overflow=sat_add(sw.counters.overflow, n_overflow + n_invalid_fwd),
+        cached_reqs=sat_add(sw.counters.cached_reqs, n_hit),
     )
     sw2 = SwitchState(
         lookup=sw.lookup, state=state3, reqtab=enq.table, orbit=orbit2,
@@ -98,7 +105,7 @@ def _seed_switch_step(sw, pkts, recirc_packets, max_serves):
     sw3, grid = ob.orbit_pass(sw2, recirc_packets, max_serves)
     n_served = jnp.sum(grid.served.astype(jnp.int32))
     bytes_served = jnp.sum(
-        jnp.where(grid.served, grid.vlen[:, None], 0)).astype(jnp.int32)
+        jnp.where(grid.served, grid.vlen[:, None], 0)).astype(jnp.uint32)
 
     route = jnp.full(pkts.width, swm.ROUTE_DROP, jnp.int32)
     to_server = (
@@ -416,3 +423,198 @@ def test_switch_step_bit_identical_to_seed(backend):
             _assert_trees_equal(sw_new, sw_old, f"step {step} SwitchState")
     finally:
         kn.set_kernel_backend(None)
+
+
+# ---------------------------------------------------------------------------
+# subround edge cases through the fused path: each scenario replayed against
+# the verbatim seed composition on BOTH kernel-capable backends
+# ---------------------------------------------------------------------------
+def _run_compare(sw, steps, backend, label, max_serves=4):
+    kn.set_kernel_backend(backend)
+    try:
+        sw_new = sw_old = sw
+        for i, (pk, budget) in enumerate(steps):
+            sw_new, out_new = swm.switch_step(sw_new, pk, jnp.int32(budget),
+                                              max_serves)
+            sw_old, out_old = _seed_switch_step(sw_old, pk, jnp.int32(budget),
+                                                max_serves)
+            _assert_trees_equal(out_new, out_old, f"{label} step {i} output")
+            _assert_trees_equal(sw_new, sw_old, f"{label} step {i} state")
+        return sw_new
+    finally:
+        kn.set_kernel_backend(None)
+
+
+def _read_batch(keys, width=16, clients=None, start_seq=0):
+    k = jnp.asarray(keys, jnp.int32)
+    n = len(keys)
+    pk = empty_batch(max(width, n), value_pad=PAD)
+    cl = jnp.asarray(clients if clients is not None
+                     else np.arange(n) % 4, jnp.int32)
+    return pk._replace(
+        op=pk.op.at[:n].set(OP_R_REQ),
+        kidx=pk.kidx.at[:n].set(k),
+        hkey=pk.hkey.at[:n].set(hash128_u32(k)),
+        seq=pk.seq.at[:n].set(jnp.arange(start_seq, start_seq + n,
+                                         dtype=jnp.int32)),
+        client=pk.client.at[:n].set(cl),
+        ts=pk.ts.at[:n].set(jnp.arange(n, dtype=jnp.float32)),
+        valid=pk.valid.at[:n].set(True),
+    )
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_zero_recirc_budget(backend):
+    """Zero budget: queues fill, nothing serves, nothing pops."""
+    sw, boot = _boot()
+    steps = [(boot, 100)]
+    steps += [(_read_batch([0, 1, 1, 2, 3], start_seq=9 * i), 0)
+              for i in range(3)]
+    sw_end = _run_compare(sw, steps, backend, "zero-budget")
+    assert int(jnp.sum(sw_end.reqtab.qlen)) > 0  # queues really filled
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_full_request_queues(backend):
+    """Completely full queues: same-key floods overflow to the server while
+    full, then a budgeted round drains the fronts."""
+    sw, boot = _boot()
+    flood = _read_batch([0] * 10 + [1] * 6, width=16)
+    steps = [(boot, 100), (flood, 0), (flood, 0), (flood, 100),
+             (_read_batch([0, 1, 2]), 100)]
+    sw_end = _run_compare(sw, steps, backend, "full-queues")
+    # queue size is 4: the flood can never leave more than S queued
+    assert int(jnp.max(sw_end.reqtab.qlen)) <= sw_end.reqtab.queue_size
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_multi_fragment_lines(backend):
+    """max_frags > 1: entries serve only when every fragment is live, and a
+    half-installed entry stays quiet."""
+    entries, f = 8, 2
+    sw = init_switch_state(entries, queue_size=4, value_pad=PAD, max_frags=f)
+    ctrl = CacheController(ControllerConfig(active_size=entries))
+    keys = np.asarray([0, 1, 2], np.int32)
+    sw, fetches = ctrl.preload(sw, keys)
+    ks = jnp.asarray([k for k, _ in fetches], jnp.int32)
+
+    def frep(keys_arr, frags, nfrag):
+        k = jnp.asarray(keys_arr, jnp.int32)
+        n = len(keys_arr)
+        pk = empty_batch(max(8, n), value_pad=PAD)
+        return pk._replace(
+            op=pk.op.at[:n].set(OP_F_REP),
+            kidx=pk.kidx.at[:n].set(k),
+            hkey=pk.hkey.at[:n].set(hash128_u32(k)),
+            seq=pk.seq.at[:n].set(jnp.asarray(frags, jnp.int32)),
+            flag=pk.flag.at[:n].set(nfrag),
+            vlen=pk.vlen.at[:n].set(24),
+            val=pk.val.at[:n].set(synth_value(k, jnp.asarray(frags, jnp.int32),
+                                              PAD)),
+            valid=pk.valid.at[:n].set(True),
+        )
+
+    # keys 0/1 get both fragments; key 2 only fragment 0 (incomplete)
+    both = frep(np.repeat(np.asarray(ks)[:2], 2), [0, 1, 0, 1], 2)
+    half = frep([int(ks[2])], [0], 2)
+    steps = [(both, 100), (half, 100),
+             (_read_batch(list(np.asarray(ks)) * 2), 100),
+             (_read_batch(list(np.asarray(ks))), 100)]
+    sw_end = _run_compare(sw, steps, backend, "multi-frag")
+    live = np.asarray(sw_end.orbit.live).reshape(entries, f)
+    frags = np.asarray(sw_end.orbit.frags)
+    complete = live.sum(axis=1) >= frags
+    # the half-installed entry must NOT count as complete
+    kidx_of = {int(k): c for c, k in enumerate(np.asarray(sw_end.lookup.kidx))}
+    assert not complete[kidx_of[int(ks[2])]]
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_fused_all_invalid_ingress(backend):
+    """An all-invalid batch must leave every table untouched but still run
+    the serving round (budget drains queued requests)."""
+    rng = np.random.default_rng(3)
+    sw, boot = _boot()
+    dead = _traffic(rng)._replace(valid=jnp.zeros(24, bool))
+    steps = [(boot, 100), (_read_batch([0, 1, 2, 3]), 0),
+             (dead, 0), (dead, 100)]
+    _run_compare(sw, steps, backend, "all-invalid")
+
+
+# ---------------------------------------------------------------------------
+# structural guarantees: one pallas_call per subround; wrap-safe counters
+# ---------------------------------------------------------------------------
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    n += _count_pallas_calls(sub.jaxpr)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    n += _count_pallas_calls(sub)
+    return n
+
+
+def test_subround_is_single_pallas_call():
+    """On the kernel backends the whole subround lowers to exactly ONE
+    pallas_call — and a window traces one per subround (inside the scan
+    body), nothing more.  The ref backend stays kernel-free."""
+    sw = init_switch_state(8, queue_size=4, value_pad=PAD)
+    carry, _ = pipe.strip_val(sw)
+    pk = empty_batch(16, value_pad=PAD)
+
+    kn.set_kernel_backend("interpret")
+    try:
+        jx = jax.make_jaxpr(
+            lambda c, p: pipe.subround_pipeline(c, p, jnp.int32(10), 4)
+        )(carry, pk)
+        assert _count_pallas_calls(jx.jaxpr) == 1
+        sub = jax.tree.map(lambda a: jnp.stack([a, a]), pk)
+        jw = jax.make_jaxpr(
+            lambda s, b: pipe.window_pipeline(
+                s, b, recirc_gbps=100.0, window_us=100.0, subrounds=2,
+                max_serves=4, key_size=16)
+        )(sw, sub)
+        # the scan body holds the one-and-only pallas_call per subround
+        assert _count_pallas_calls(jw.jaxpr) == 1
+    finally:
+        kn.set_kernel_backend(None)
+
+    kn.set_kernel_backend("ref")
+    try:
+        jx = jax.make_jaxpr(
+            lambda c, p: pipe.subround_pipeline(c, p, jnp.int32(10), 4)
+        )(carry, pk)
+        assert _count_pallas_calls(jx.jaxpr) == 0
+    finally:
+        kn.set_kernel_backend(None)
+
+
+def test_running_counters_saturate_instead_of_wrapping():
+    """Counters.popularity / hits / overflow / cached_reqs accumulate in
+    uint32 and clamp at the max — a counter pushed near the ceiling by a
+    long run must never wrap negative or backwards."""
+    from repro.core.types import COUNTER_DTYPE
+    top = jnp.iinfo(COUNTER_DTYPE).max
+    near = jnp.asarray(top - 2, COUNTER_DTYPE)
+    assert int(sat_add(near, jnp.int32(1))) == top - 1
+    assert int(sat_add(near, jnp.int32(100))) == top      # clamps, no wrap
+    assert int(sat_add(jnp.asarray(top, COUNTER_DTYPE), jnp.int32(7))) == top
+
+    sw, boot = _boot()
+    sw, _ = swm.switch_step(sw, boot, jnp.int32(100), 4)
+    sw = sw._replace(counters=sw.counters._replace(
+        hits=jnp.asarray(top - 1, COUNTER_DTYPE),
+        cached_reqs=jnp.asarray(top - 1, COUNTER_DTYPE),
+        popularity=jnp.full_like(sw.counters.popularity, top - 1),
+    ))
+    sw2, out = swm.switch_step(sw, _read_batch([0, 1, 0, 2]), jnp.int32(0), 4)
+    assert int(out.stats.n_hit) > 0
+    # monotone under pressure: clamped at the ceiling, never wrapped
+    assert int(sw2.counters.hits) == top
+    assert int(jnp.max(sw2.counters.popularity)) == top
+    assert np.all(np.asarray(sw2.counters.popularity)
+                  >= np.asarray(sw.counters.popularity))
