@@ -1,0 +1,171 @@
+"""Cross-rack spine fabric primitives (beyond-paper: two-tier topology).
+
+OrbitCache balances skewed load *within* a rack — one ToR switch, one
+server shard.  The multi-rack story (TurboKV-style in-switch coordination
+across a distributed store) needs a second tier: R racks hang off a shared
+spine switch that (a) receives the inter-rack request traffic, (b) runs
+its own cache scheme over the *global* hot set, and (c) forwards its
+misses down to the owning rack's ToR pipeline.
+
+This module holds the pure, scheme-agnostic pieces of that topology:
+
+* **Key homing** — every rack owns a full copy of the local keyspace; the
+  global identity of a key is ``(kidx, home rack)`` packed as
+  ``kidx * n_racks + home``.  The spine's lookup tables key on the global
+  identity (so key 5 of rack 0 and key 5 of rack 1 never collide in the
+  spine cache) while racks and servers keep operating on the local
+  ``kidx`` unchanged.
+* **Locality draws** — per-lane target racks: local with probability
+  ``local_frac`` (a traced scalar, so locality sweeps batch without
+  retracing), else uniform over the other racks.
+* **One-hot lane exchange** — the inter-rack forwarding fabric.  Packets
+  crossing tiers are *compacted* into fixed-width lane buffers (remote
+  requests of all racks into the spine ingress; spine misses into each
+  owning rack's forward lanes) by the same scatter-free unique-writer
+  reduction the data plane uses everywhere — a one-hot permutation, so
+  the whole exchange vmaps cleanly over a sweep axis
+  (``fleet.BatchedFabricSimulator``).
+
+Everything here is shape-static and mask-gated: lane widths are fixed,
+overflow beyond a buffer's width is *dropped and counted* (open-loop UDP
+semantics, like the server FIFOs), and with ``local_frac == 1.0`` every
+mask is identically False so the fabric degenerates bit-exactly to R
+independent racks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .scatter_free import unique_writer
+
+
+# ---------------------------------------------------------------------------
+# key homing
+# ---------------------------------------------------------------------------
+def global_key(kidx: jnp.ndarray, home: jnp.ndarray, n_racks: int,
+               ) -> jnp.ndarray:
+    """Pack a (local key, home rack) pair into the global key identity."""
+    return kidx * n_racks + home
+
+
+def split_global_key(gkidx: jnp.ndarray, n_racks: int,
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Unpack a global key identity into ``(local kidx, home rack)``."""
+    return gkidx // n_racks, gkidx % n_racks
+
+
+# ---------------------------------------------------------------------------
+# locality draws
+# ---------------------------------------------------------------------------
+def draw_targets(rng: jax.Array, n_racks: int, local_frac: jnp.ndarray,
+                 shape: tuple[int, ...]) -> jnp.ndarray:
+    """Per-lane target rack: int32 array of ``shape``; ``shape[0]`` is the
+    source-rack axis (rack i's lanes sit in row i).
+
+    A lane stays local with probability ``local_frac`` (traced scalar —
+    sweepable without retrace) and otherwise targets a uniformly random
+    *other* rack.  ``local_frac >= 1.0`` yields the source rack on every
+    lane deterministically (uniform draws live in [0, 1)), which is what
+    makes the fabric's locality-1.0 mode bit-identical to independent
+    racks.
+    """
+    assert shape[0] == n_racks, (shape, n_racks)
+    src = jnp.arange(n_racks, dtype=jnp.int32).reshape(
+        (n_racks,) + (1,) * (len(shape) - 1))
+    if n_racks == 1:
+        return jnp.broadcast_to(src, shape)
+    r_loc, r_oth = jax.random.split(rng)
+    u = jax.random.uniform(r_loc, shape, jnp.float32)
+    o = jax.random.randint(r_oth, shape, 0, n_racks - 1, jnp.int32)
+    other = o + (o >= src)  # uniform over the n_racks - 1 other racks
+    return jnp.where(u < local_frac, jnp.broadcast_to(src, shape), other)
+
+
+# ---------------------------------------------------------------------------
+# one-hot lane exchange
+# ---------------------------------------------------------------------------
+def compact_slots(mask: jnp.ndarray, width: int,
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Claim consecutive destination slots for the masked lanes.
+
+    ``mask`` bool[N]; masked lanes claim slots 0,1,2,... in lane order
+    (the order a hardware fabric would serialize them in); lanes beyond
+    ``width`` are dropped.  Returns ``(writer int32[width], written
+    bool[width], dropped int32[])`` — the one-hot permutation the
+    gather-side of the exchange consumes.
+    """
+    m = mask.astype(jnp.int32)
+    order = jnp.cumsum(m) - m
+    dest = jnp.where(mask, order, width)
+    writer, written = unique_writer(dest, mask, width)
+    dropped = jnp.sum(m) - jnp.sum(written.astype(jnp.int32))
+    return writer.astype(jnp.int32), written, dropped
+
+
+def gather_lanes(template, src, writer: jnp.ndarray, written: jnp.ndarray):
+    """Apply a :func:`compact_slots` permutation to a packet pytree.
+
+    ``out[i] = src[writer[i]]`` where ``written[i]`` else ``template[i]``
+    — leaf-wise over matching pytrees (extra trailing axes broadcast, so
+    value payloads and 4-lane hkeys ride along).
+    """
+    def pick(t, s):
+        w = written.reshape(written.shape + (1,) * (s.ndim - 1))
+        return jnp.where(w, s[writer], t)
+    return jax.tree.map(pick, template, src)
+
+
+def racks_to_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """[R, S, L, ...] -> [S, R*L, ...]: per-subround rows over all racks'
+    lanes (rack-major within a row)."""
+    r, s_ax, lanes = x.shape[0], x.shape[1], x.shape[2]
+    return jnp.moveaxis(x, 0, 1).reshape((s_ax, r * lanes) + x.shape[3:])
+
+
+def exchange_to_spine(reqs, mask: jnp.ndarray, template,
+                      ) -> tuple[object, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compact every rack's masked lanes into the spine ingress.
+
+    ``reqs`` — packet pytree with leaves [R, S, L, ...] (rack, subround,
+    lane); ``mask`` bool[R, S, L]; ``template`` — the empty spine row
+    pytree with leaves [W, ...] (one subround row, W spine lanes).
+
+    Returns ``(spine_batch [S, W, ...], writer [S, W], written [S, W],
+    dropped [])``.  The writer/written permutation is surfaced so callers
+    can carry extra per-lane arrays (e.g. target racks) across the
+    exchange.
+    """
+    rows = jax.tree.map(racks_to_rows, reqs)
+    mrows = racks_to_rows(mask)
+    width = jax.tree.leaves(template)[0].shape[0]
+    writer, written, dropped = jax.vmap(
+        lambda m: compact_slots(m, width))(mrows)
+    spine = jax.vmap(lambda row, wr, wn: gather_lanes(template, row, wr, wn)
+                     )(rows, writer, written)
+    return spine, writer, written, jnp.sum(dropped)
+
+
+def exchange_to_racks(spine_batch, fwd_mask: jnp.ndarray, home: jnp.ndarray,
+                      n_racks: int, template,
+                      ) -> tuple[object, jnp.ndarray]:
+    """Scatter the spine's masked egress lanes to their owning racks.
+
+    ``spine_batch`` — pytree with leaves [S, W, ...]; ``fwd_mask`` /
+    ``home`` — bool/int32[S, W]; ``template`` — empty per-rack row pytree
+    with leaves [Wf, ...].  For each rack r, the lanes with ``fwd_mask &
+    (home == r)`` compact into that rack's forward rows — a one-hot
+    permutation per (rack, subround), vmap-compatible end to end.
+
+    Returns ``(rack_batches [R, S, Wf, ...], dropped [])``.
+    """
+    width = jax.tree.leaves(template)[0].shape[0]
+
+    def per_rack(r):
+        def per_sub(row, m):
+            wr, wn, dr = compact_slots(m, width)
+            return gather_lanes(template, row, wr, wn), dr
+        return jax.vmap(per_sub)(spine_batch, fwd_mask & (home == r))
+
+    out, drops = jax.vmap(per_rack)(jnp.arange(n_racks, dtype=jnp.int32))
+    return out, jnp.sum(drops)

@@ -86,6 +86,11 @@ class StepStats(NamedTuple):
                                # summing long traces must still widen —
                                # e.g. np.sum(..., dtype=np.uint64))
     n_crn: jnp.ndarray         # correction requests (collision resolution)
+    n_fwd: jnp.ndarray         # valid packets egressed toward the next tier
+                               # down (ROUTE_SERVER): at a ToR that is the
+                               # rack's storage servers, at the spine switch
+                               # it is the owning rack — the per-tier
+                               # forward counter of the fabric topology
 
 
 class StepOutput(NamedTuple):
@@ -263,6 +268,7 @@ def subround_pipeline(
         n_served=n_served,
         bytes_served=bytes_served,
         n_crn=jnp.sum(crn.astype(jnp.int32)),
+        n_fwd=jnp.sum((to_server & valid).astype(jnp.int32)),
     )
     out = SubroundOut(route=route, flag=flag_out, grid=grid, stats=stats,
                       val_writer=val_writer, val_written=val_written)

@@ -81,8 +81,7 @@ def apply_winners(
     The fused ``kernels.subround`` op performs :func:`enqueue`'s match +
     offset + winner reduction AND this metadata gather + pointer bump
     inside the switch kernel; both functions survive as the free-standing
-    oracles the kernel is parity-tested against (``kernels.orbit_pipeline``
-    still uses this apply directly).
+    oracles the kernel is parity-tested against.
     """
     s = table.queue_size
     def put(arr, val):

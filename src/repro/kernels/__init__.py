@@ -14,9 +14,9 @@ update/query) are formulated as 128-aligned one-hot contractions, and
 Backend dispatch
 ----------------
 The simulator hot path calls the dispatchers below (``subround`` — the
-whole per-subround switch pass as ONE kernel, ``orbit_pipeline``,
-``orbit_match``, ``cms_update_query``, ``hot_gather``) instead of picking
-a kernel variant by hand.  The backend is resolved once per trace:
+whole per-subround switch pass as ONE kernel, ``orbit_match``,
+``cms_update_query``, ``hot_gather``) instead of picking a kernel variant
+by hand.  The backend is resolved once per trace:
 
   * ``pallas``     compiled Pallas kernels (the TPU hot path),
   * ``interpret``  Pallas kernels under the interpreter (debugging,
@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from . import cms as _cms_pkg                      # noqa: F401, E402
 from . import hot_gather as _hot_gather_pkg        # noqa: F401, E402
 from . import orbit_match as _orbit_match_pkg      # noqa: F401, E402
-from . import orbit_pipeline as _orbit_pipe_pkg    # noqa: F401, E402
+from . import subround as _subround_pkg            # noqa: F401, E402
 
 KERNEL_BACKENDS = ("pallas", "interpret", "ref")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -91,29 +91,6 @@ def orbit_match(hkey, table_hkeys, occupied, valid, pop_mask=None,
                block_b=block_b, interpret=(be == "interpret"))
 
 
-def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
-                   queue_size: int, block_b: int = 128):
-    """Fused match + request-table admission: the whole per-packet ingress
-    decision of the switch data plane in one VMEM-resident pass.
-
-    Superset of ``orbit_match``: 128-bit exact-match, validity filter and
-    popularity accumulation over the ``want_mask`` lanes, PLUS request-table
-    admission for those lanes (arrival offsets against ``qlen``/``rear``,
-    acceptance, and the unique-writer reduction over the C*S slots).
-
-    Returns (cidx [B], hit [B], valid_hit [B], pop [C], accepted bool[B],
-    overflow bool[B], new_counts [C], writer int32[C*S], written bool[C*S]).
-    """
-    be = kernel_backend()
-    if be == "ref":
-        from .orbit_pipeline.ref import orbit_pipeline_ref
-        return orbit_pipeline_ref(hkey, table_hkeys, occupied, valid,
-                                  want_mask, qlen, rear, queue_size)
-    from .orbit_pipeline.ops import orbit_pipeline as _op
-    return _op(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
-               queue_size, block_b=block_b, interpret=(be == "interpret"))
-
-
 def subround(
     hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq, port, ts,
     table_hkeys, occupied, st_valid, st_version,
@@ -124,7 +101,7 @@ def subround(
 ):
     """The FULL per-subround switch pass as one fused op (paper Fig. 4).
 
-    Superset of ``orbit_pipeline``: 128-bit match, validity filter,
+    Superset of ``orbit_match``: 128-bit match, validity filter,
     popularity, request-table admission AND metadata apply, the state-table
     invalidate/validate pass, the orbit-line metadata install (value bytes
     deferred to the per-window apply), and the orbit serving round
@@ -135,8 +112,8 @@ def subround(
     """
     be = kernel_backend()
     if be == "ref":
-        from .orbit_pipeline.ops import SubroundOuts
-        from .orbit_pipeline.ref import subround_ref
+        from .subround.ops import SubroundOuts
+        from .subround.ref import subround_ref
         out = subround_ref(
             hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client, seq,
             port, ts, table_hkeys, occupied, st_valid, st_version,
@@ -146,7 +123,7 @@ def subround(
             queue_size=queue_size, max_frags=max_frags,
             max_serves=max_serves)
         return SubroundOuts(*out)
-    from .orbit_pipeline.ops import subround as _sr
+    from .subround.ops import subround as _sr
     return _sr(hkey, want, wreq, inst, frag, nfrags, kidx, vlen, client,
                seq, port, ts, table_hkeys, occupied, st_valid, st_version,
                rt_client, rt_seq, rt_port, rt_ts, rt_acked, rt_kidx, qlen,

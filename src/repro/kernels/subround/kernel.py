@@ -1,23 +1,24 @@
-"""orbit_pipeline: fused match + request-table admission as a Pallas kernel.
+"""subround: the FULL per-subround switch pass as one Pallas kernel.
 
-One VMEM-resident pass per request tile fuses the whole ingress decision of
-the switch data plane (paper Fig. 4a):
+One VMEM-resident pass per request tile fuses the whole per-subround switch
+decision of the data plane (paper Fig. 4): 128-bit exact match + validity +
+popularity, request-table admission AND metadata apply, the state-table
+invalidate/validate one-hots, the orbit-line install last-writer reduction,
+and the orbit serving round finalized at the last grid step.
 
-  * 128-bit exact-match against the C installed entries + validity filter +
-    gated popularity accumulation (the orbit_match slice);
-  * request-table admission for the matched valid R-REQ lanes: per-entry
-    arrival offsets, acceptance against the free queue space, and the
-    unique-writer reduction over the C*S request-table slots — the one-hot
-    winner pass that previously ran as a separate ``rt.enqueue`` XLA stage.
+Tiling: the tables (hkeys, flags, queue pointers, orbit metadata) stay
+resident in VMEM across the whole grid; the request batch streams through
+in ``block_b`` tiles.  Cross-tile sequencing (a packet's slot offset
+depends on how many same-entry packets came before it in the batch) is
+carried in accumulator output blocks mapped to a fixed index — grid steps
+execute sequentially on a TPU core, so the running per-entry attempt
+counts, the popularity sums, and the winner grids all build up in place,
+exactly like the resident sketch accumulator in the cms kernel.
 
-Tiling: the table (hkeys, flags, queue pointers) stays resident in VMEM
-across the whole grid; the request batch streams through in ``block_b``
-tiles.  Cross-tile sequencing (a packet's slot offset depends on how many
-same-entry packets came before it in the batch) is carried in accumulator
-output blocks mapped to a fixed index — grid steps execute sequentially on
-a TPU core, so the running per-entry attempt counts, the popularity sums,
-and the winner grids all build up in place, exactly like the resident
-sketch accumulator in the cms kernel.
+(The narrower match+admission-only ``orbit_pipeline`` kernel that used to
+live here was retired once ``subround`` became the only production data
+plane; its match/admission slice survives verbatim as the first stages of
+``_subround_kernel``.)
 """
 from __future__ import annotations
 
@@ -28,143 +29,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pipeline_kernel(hkey_ref, table_ref, occ_ref, valid_ref, mask_ref,
-                     qlen_ref, rear_ref,
-                     cidx_ref, hit_ref, vhit_ref, acc_ref, ovf_ref,
-                     pop_ref, newc_ref, writer_ref, written_ref, wcnt_ref,
-                     *, queue_size: int):
-    step = pl.program_id(0)
-    hk = hkey_ref[...]                       # [TB, 4] uint32
-    tb = table_ref[...]                      # [C, 4] uint32
-    occ = occ_ref[...]                       # [C] int32
-    val = valid_ref[...]                     # [C] int32
-    msk = mask_ref[...]                      # [TB] int32 want/popularity gate
-    qlen = qlen_ref[...]                     # [C] int32 (state at call time)
-    rear = rear_ref[...]                     # [C] int32
-    s = queue_size
-    tb_n = hk.shape[0]
-    c = tb.shape[0]
-
-    # ---- match slice (identical to the orbit_match kernel) ----------------
-    eq = jnp.ones((tb_n, c), dtype=jnp.bool_)
-    for lane in range(4):
-        eq = eq & (hk[:, lane][:, None] == tb[:, lane][None, :])
-    eq = eq & (occ[None, :] > 0)
-
-    hit = jnp.any(eq, axis=1)
-    cidx = jnp.argmax(eq, axis=1).astype(jnp.int32)
-    safe = jnp.where(hit, cidx, 0)
-    entry_valid = (val[safe] > 0) & hit
-
-    cidx_ref[...] = jnp.where(hit, cidx, -1)
-    hit_ref[...] = hit.astype(jnp.int32)
-    vhit_ref[...] = entry_valid.astype(jnp.int32)
-
-    pop_delta = jnp.sum((eq & (msk[:, None] > 0)).astype(jnp.int32), axis=0)
-
-    @pl.when(step == 0)
-    def _init():
-        pop_ref[...] = jnp.zeros_like(pop_ref)
-        newc_ref[...] = jnp.zeros_like(newc_ref)
-        writer_ref[...] = jnp.zeros_like(writer_ref)
-        written_ref[...] = jnp.zeros_like(written_ref)
-        wcnt_ref[...] = jnp.zeros_like(wcnt_ref)
-
-    # ---- admission slice --------------------------------------------------
-    want = (msk > 0) & hit & entry_valid
-    col = jax.lax.broadcasted_iota(jnp.int32, (tb_n, c), 1)
-    onehot = (col == safe[:, None]) & want[:, None]          # [TB, C]
-    oh = onehot.astype(jnp.int32)
-    # exclusive in-tile arrival order among same-entry attempts
-    tile_prior = jnp.cumsum(oh, axis=0) - oh                 # [TB, C]
-    running = wcnt_ref[...]                                  # [C] prior tiles
-    # row-gathers at each lane's own entry: one-hot row sums (MXU form)
-    offset = (jnp.sum(tile_prior * oh, axis=1)
-              + jnp.sum(oh * running[None, :], axis=1))      # [TB]
-    free_i = jnp.sum(oh * (s - qlen)[None, :], axis=1)
-    rear_i = jnp.sum(oh * rear[None, :], axis=1)
-
-    accepted = want & (offset < free_i)
-    overflow = want & ~accepted
-    acc_ref[...] = accepted.astype(jnp.int32)
-    ovf_ref[...] = overflow.astype(jnp.int32)
-
-    # unique-writer grid over the C*S request-table slots
-    slot = (rear_i + offset) % s
-    flat = safe * s + slot                                   # [TB]
-    colcs = jax.lax.broadcasted_iota(jnp.int32, (tb_n, c * s), 1)
-    woh = accepted[:, None] & (flat[:, None] == colcs)       # [TB, C*S]
-    written_tile = jnp.any(woh, axis=0)
-    writer_tile = jnp.argmax(woh, axis=0).astype(jnp.int32) + step * tb_n
-
-    pop_ref[...] = pop_ref[...] + pop_delta
-    newc_ref[...] = newc_ref[...] + jnp.sum(
-        (onehot & accepted[:, None]).astype(jnp.int32), axis=0)
-    writer_ref[...] = jnp.where(written_tile, writer_tile, writer_ref[...])
-    written_ref[...] = written_ref[...] | written_tile.astype(jnp.int32)
-    wcnt_ref[...] = running + jnp.sum(oh, axis=0)
-
-
-@partial(jax.jit, static_argnames=("queue_size", "block_b", "interpret"))
-def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
-                   *, queue_size: int, block_b: int = 128,
-                   interpret: bool = True):
-    """Fused lookup + admission (see module doc).  B % block_b == 0.
-
-    Returns (cidx [B], hit [B], valid_hit [B], pop [C], accepted [B],
-    overflow [B], new_counts [C], writer [C*S], written [C*S]) — the last
-    two are the unique-writer reduction over request-table slots; all int32.
-    """
-    b = hkey.shape[0]
-    c = table_hkeys.shape[0]
-    s = queue_size
-    grid = (b // block_b,)
-    ent = lambda i: (0,)
-    lane = lambda i: (i,)
-    out = pl.pallas_call(
-        partial(_pipeline_kernel, queue_size=s),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
-            pl.BlockSpec((c, 4), lambda i: (0, 0)),      # table resident
-            pl.BlockSpec((c,), ent),
-            pl.BlockSpec((c,), ent),
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((c,), ent),
-            pl.BlockSpec((c,), ent),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((block_b,), lane),
-            pl.BlockSpec((c,), ent),                     # pop (accumulated)
-            pl.BlockSpec((c,), ent),                     # new_counts
-            pl.BlockSpec((c * s,), ent),                 # writer
-            pl.BlockSpec((c * s,), ent),                 # written
-            pl.BlockSpec((c,), ent),                     # running attempts
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((b,), jnp.int32),
-            jax.ShapeDtypeStruct((c,), jnp.int32),
-            jax.ShapeDtypeStruct((c,), jnp.int32),
-            jax.ShapeDtypeStruct((c * s,), jnp.int32),
-            jax.ShapeDtypeStruct((c * s,), jnp.int32),
-            jax.ShapeDtypeStruct((c,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear)
-    return out[:9]  # the running attempt counts are kernel-internal
-
-
-# ---------------------------------------------------------------------------
-# subround: the FULL per-subround switch pass as one pallas_call
-# ---------------------------------------------------------------------------
 def _subround_kernel(
     # per-lane tile inputs
     hkey_ref, want_ref, wreq_ref, inst_ref, frag_ref, nfr_ref, kidx_ref,

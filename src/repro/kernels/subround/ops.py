@@ -1,5 +1,5 @@
-"""Public wrapper for the orbit_pipeline kernel: pads batch/table to
-hardware alignment, picks interpret mode off-TPU, unpads results."""
+"""Public wrapper for the subround kernel: pads batch/table to hardware
+alignment, picks interpret mode off-TPU, unpads results."""
 from __future__ import annotations
 
 from typing import NamedTuple
@@ -7,43 +7,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .kernel import orbit_pipeline as _kernel
 from .kernel import subround as _subround_kernel
-from .ref import orbit_pipeline_ref, subround_ref  # noqa: F401  (oracles)
+from .ref import subround_ref  # noqa: F401  (oracle)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def orbit_pipeline(hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
-                   queue_size: int, block_b: int = 128,
-                   interpret: bool | None = None):
-    """Fused match + admission (see kernel.py).  Any B, any C."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    b = hkey.shape[0]
-    c = table_hkeys.shape[0]
-    s = queue_size
-    block_b = min(block_b, max(8, b))
-    pad_b = (-b) % block_b
-    pad_c = (-c) % 128 if c % 128 else 0
-    if pad_b:
-        hkey = jnp.pad(hkey, ((0, pad_b), (0, 0)))
-        want_mask = jnp.pad(want_mask, (0, pad_b))
-    if pad_c:
-        # padded entries are unoccupied -> never match, never admit
-        table_hkeys = jnp.pad(table_hkeys, ((0, pad_c), (0, 0)))
-        occupied = jnp.pad(occupied, (0, pad_c))
-        valid = jnp.pad(valid, (0, pad_c))
-        qlen = jnp.pad(qlen, (0, pad_c))
-        rear = jnp.pad(rear, (0, pad_c))
-    cidx, hit, vhit, acc, ovf, pop, newc, writer, written = _kernel(
-        hkey, table_hkeys, occupied, valid, want_mask, qlen, rear,
-        queue_size=s, block_b=block_b, interpret=interpret)
-    return (cidx[:b], hit[:b], vhit[:b], pop[:c],
-            acc[:b].astype(bool), ovf[:b].astype(bool), newc[:c],
-            writer[:c * s], written[:c * s].astype(bool))
 
 
 class SubroundOuts(NamedTuple):

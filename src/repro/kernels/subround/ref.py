@@ -1,8 +1,9 @@
-"""Pure-jnp oracle for orbit_pipeline (fused match + request-table admission).
+"""Pure-jnp oracle for the fused subround op.
 
-This is the composition of ``orbit_match_ref`` with the one-hot winner pass
-of ``repro.core.request_table.enqueue``, expressed as one function so the
-Pallas kernel has a single oracle to match bit-for-bit:
+``subround_ref`` is the single oracle the Pallas kernel must match
+bit-for-bit; its match + admission slice lives in :func:`_match_admission`
+— the composition of ``orbit_match_ref`` with the one-hot winner pass of
+``repro.core.request_table.enqueue``:
 
   * 128-bit exact match against the installed entries + validity filter +
     gated popularity accumulation (identical to orbit_match_ref);
@@ -13,15 +14,19 @@ Pallas kernel has a single oracle to match bit-for-bit:
 
 ``want_mask`` gates both popularity and admission: the switch enqueues
 exactly the valid R-REQ lanes it counts (paper Fig. 4a).
+
+(The slice used to be exported as the ``kernels.orbit_pipeline`` op; that
+op lost its last production caller when ``subround`` landed and was
+retired — the math stays here as the internal helper.)
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def orbit_pipeline_ref(hkey, table_hkeys, occupied, valid, want_mask,
-                       qlen, rear, queue_size: int):
-    """Fused lookup + admission oracle.
+def _match_admission(hkey, table_hkeys, occupied, valid, want_mask,
+                     qlen, rear, queue_size: int):
+    """Fused lookup + admission slice of the subround oracle.
 
     Args:
       hkey: uint32[B, 4] request key hashes.
@@ -90,7 +95,7 @@ def subround_ref(
     """Pure-jnp oracle for the full fused subround (paper Fig. 4, one pass).
 
     The whole per-subround switch pass as one function: the
-    ``orbit_pipeline_ref`` match + admission slice, PLUS
+    :func:`_match_admission` match + admission slice, PLUS
 
       * the request-table metadata apply (``rt.apply_winners``'s winner
         gathers and queue-pointer bump);
@@ -115,8 +120,8 @@ def subround_ref(
 
     # ---- match + admission: THE one oracle, not a copy of it --------------
     cidx_m, khit, kvhit, pop, accepted, overflow, new_counts, writer, \
-        written = orbit_pipeline_ref(hkey, table_hkeys, occupied, st_valid,
-                                     want, qlen, rear, s)
+        written = _match_admission(hkey, table_hkeys, occupied, st_valid,
+                                   want, qlen, rear, s)
     hit = khit > 0
     entry_valid = kvhit > 0
     safe = jnp.where(hit, cidx_m, 0)

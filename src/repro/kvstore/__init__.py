@@ -2,4 +2,5 @@
 and the discrete-time rack simulator used by the paper's evaluation."""
 from .workload import WorkloadConfig, Workload, WorkloadArrays  # noqa: F401
 from .simulator import RackConfig, RackSimulator  # noqa: F401
-from .fleet import BatchedRackSimulator  # noqa: F401
+from .fleet import BatchedRackSimulator, BatchedFabricSimulator  # noqa: F401
+from .fabric_sim import FabricConfig, FabricSimulator  # noqa: F401

@@ -24,6 +24,13 @@ per subround (batched over the rack axis), and the batched orbit value
 buffers update by per-window winner scatters on the donated chunk carry —
 untouched rows of the ``[N, C*F, value_pad]`` byte stack are never
 rewritten between windows.
+
+**Fabric mode** — :class:`BatchedFabricSimulator` vmaps the whole two-tier
+:func:`repro.kvstore.fabric_sim.fabric_window_step` (R racks + spine) over
+a leading sweep axis: the rack-local fraction is a carry scalar, so a
+locality sweep (the Fig-9-style ``benchmarks.fabric_locality``) advances
+every locality point's entire fabric in one compiled scan.  The inter-tier
+lane exchange is a one-hot permutation, so it vmaps like everything else.
 """
 from __future__ import annotations
 
@@ -48,17 +55,11 @@ from .simulator import (
     init_carry,
     make_client_config,
     make_server_config,
+    tree_stack as _tree_stack,
+    tree_take as _tree_take,
     window_step,
 )
 from .workload import Workload, WorkloadArrays
-
-
-def _tree_stack(trees):
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
-
-
-def _tree_take(tree, i):
-    return jax.tree.map(lambda x: x[i], tree)
 
 
 def compiled_batched_chunk(cfg: RackConfig, server_cfg, client_cfg,
@@ -300,3 +301,98 @@ class BatchedRackSimulator:
             res.info = dict(scheme=c.scheme, point=i)
             results.append(res)
         return results
+
+
+# ---------------------------------------------------------------------------
+# fabric mode: vmapped two-tier (racks + spine) sweeps
+# ---------------------------------------------------------------------------
+class BatchedFabricSimulator:
+    """N whole fabrics (R racks + spine each) advancing in lockstep.
+
+    One fabric per sweep point; the points share the rack/fabric geometry
+    and the workload but may differ in rack-local fraction, offered load
+    and RNG seeds — the locality-sweep benchmark runs all its points in
+    one compiled scan this way.
+    """
+
+    def __init__(self, cfg: RackConfig, fcfg, wl: Workload,
+                 local_fracs: Sequence[float] | None = None,
+                 offered_rps: Sequence[float] | float | None = None,
+                 seeds: Sequence[int] | None = None,
+                 n_points: int | None = None):
+        from .fabric_sim import FabricSimulator
+
+        n = max(len(local_fracs) if local_fracs is not None else 1,
+                len(offered_rps) if isinstance(offered_rps, (list, tuple))
+                else 1,
+                len(seeds) if seeds is not None else 1,
+                n_points or 1)
+
+        def _bcast(xs, what):
+            xs = list(xs)
+            if len(xs) == 1:
+                return xs * n
+            if len(xs) != n:
+                raise ValueError(f"{what}: got {len(xs)} entries for "
+                                 f"{n} sweep points")
+            return xs
+
+        fracs = _bcast(local_fracs if local_fracs is not None
+                       else [fcfg.local_frac], "local_fracs")
+        seeds = _bcast(seeds if seeds is not None
+                       else [cfg.seed + 1000 * i for i in range(n)], "seeds")
+        if offered_rps is not None and np.isscalar(offered_rps):
+            offered_rps = [float(offered_rps)]
+        offered = (_bcast(offered_rps, "offered_rps")
+                   if offered_rps is not None else None)
+        self.cfg = cfg
+        self.fcfg = fcfg
+        self.wl = wl
+        self.n_points = n
+        # build each point as a serial FabricSimulator (host-side preload
+        # surgery is per point), then stack the carries
+        self._sims = [
+            FabricSimulator(replace(cfg, seed=seeds[i]), fcfg, wl)
+            for i in range(n)
+        ]
+        for i, sim in enumerate(self._sims):
+            sim.set_local_frac(fracs[i])
+        self.server_cfg = self._sims[0].server_cfg
+        self.client_cfg = self._sims[0].client_cfg
+        self.key_size = self._sims[0].key_size
+        self.carry = None  # stacked after preload
+        if offered is not None:
+            for sim, rps in zip(self._sims, offered):
+                sim.set_offered(rps)
+
+    def preload(self, warm_windows: int = 16) -> None:
+        if self._sims is None:
+            raise RuntimeError("fabric sweep already stacked — preload once, "
+                               "before the first run_windows()")
+        # host-side table surgery per point, warm-up batched: the warm
+        # windows run through the SAME vmapped chunk as the measurement,
+        # so no serial fabric step is ever compiled for a sweep
+        warm = any(s.cfg.scheme == "orbitcache" for s in self._sims)
+        for sim in self._sims:
+            sim.preload(warm_windows=0)
+        self._stack()
+        if warm and warm_windows > 0:
+            self.run_windows(warm_windows)
+
+    def _stack(self) -> None:
+        self.carry = _tree_stack([s.carry for s in self._sims])
+        # the per-point carries are dead once stacked (and stale after the
+        # first run) — drop them so device state isn't held twice
+        self._sims = None
+
+    def run_windows(self, n: int) -> dict[str, np.ndarray]:
+        """Advance every fabric ``n`` windows; rack traces are
+        [N, n, R, ...], spine traces [N, n]."""
+        if self.carry is None:
+            self._stack()
+        from .fabric_sim import fabric_chunk, fabric_metrics_dict
+        chunk = fabric_chunk(self.cfg, self.fcfg, self.server_cfg,
+                             self.client_cfg, self.key_size, n, vmapped=True)
+        carry, ys = chunk(self.wl.arrays, self.carry)
+        self.carry = carry
+        return fabric_metrics_dict(ys)

@@ -106,6 +106,9 @@ class WindowMetrics(NamedTuple):
     installs: jnp.ndarray
     crn: jnp.ndarray            # correction requests issued
     mismatches: jnp.ndarray
+    fwd: jnp.ndarray            # packets this tier forwarded down
+                                # (ROUTE_SERVER egress — the per-tier
+                                # forward counter of the fabric topology)
 
 
 class SimCarry(NamedTuple):
@@ -121,8 +124,18 @@ class SimCarry(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# shared construction helpers (used by RackSimulator and fleet.py)
+# shared construction helpers (used by RackSimulator, fleet.py, fabric_sim.py)
 # ---------------------------------------------------------------------------
+def tree_stack(trees):
+    """Stack matching pytrees along a new leading axis (sweep/rack axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_take(tree, i):
+    """Slice index ``i`` off every leaf's leading axis."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
 def make_server_config(cfg: RackConfig) -> ServerConfig:
     return ServerConfig(
         num_servers=cfg.num_servers,
@@ -213,6 +226,30 @@ def build_fetch_batch(cfg: RackConfig, vlen_table: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # the window step (pure; shared by serial and batched simulators)
 # ---------------------------------------------------------------------------
+def generate_requests(
+    cfg: RackConfig,
+    client_cfg: cl.ClientConfig,
+    wl: WorkloadArrays,
+    carry: SimCarry,
+):
+    """Draw this window's open-loop client batch: ``(rng', clients', reqs)``.
+
+    The generation half of :func:`generate_ingress`, split out so the
+    cross-rack fabric (``repro.kvstore.fabric_sim``) can divert remote
+    request lanes to the spine switch BEFORE the rack ingress is assembled
+    while consuming exactly the same per-rack RNG stream as a standalone
+    rack — the rack-local-fraction-1.0 bit-identity guarantee rests on
+    this shared code path.
+    """
+    rng, r_gen = jax.random.split(carry.rng)
+    clients, reqs = cl.generate(
+        carry.clients, client_cfg, r_gen,
+        wl.cdf, wl.perm, wl.vlen,
+        carry.offered, carry.write_ratio, cfg.num_servers, carry.now,
+    )
+    return rng, clients, reqs
+
+
 def generate_ingress(
     cfg: RackConfig,
     client_cfg: cl.ClientConfig,
@@ -228,12 +265,7 @@ def generate_ingress(
     the timed stages can never drift from the production input pipeline.
     Returns ``(rng', clients', reqs, sub)``.
     """
-    rng, r_gen = jax.random.split(carry.rng)
-    clients, reqs = cl.generate(
-        carry.clients, client_cfg, r_gen,
-        wl.cdf, wl.perm, wl.vlen,
-        carry.offered, carry.write_ratio, cfg.num_servers, carry.now,
-    )
+    rng, clients, reqs = generate_requests(cfg, client_cfg, wl, carry)
     sub = jax.tree.map(
         lambda *xs: jnp.concatenate(xs, axis=1), reqs, carry.pending,
         carry.fetch,
@@ -250,8 +282,34 @@ def window_step(
     carry: SimCarry,
     _=None,
 ) -> tuple[SimCarry, WindowMetrics]:
-    c = cfg
     rng, clients, reqs, sub = generate_ingress(cfg, client_cfg, wl, carry)
+    return process_window(cfg, server_cfg, client_cfg, key_size, carry,
+                          rng, clients, reqs, sub)
+
+
+def process_window(
+    cfg: RackConfig,
+    server_cfg: ServerConfig,
+    client_cfg: cl.ClientConfig,
+    key_size: int,
+    carry: SimCarry,
+    rng: jax.Array,
+    clients: cl.ClientState,
+    reqs: PacketBatch,
+    sub: PacketBatch,
+) -> tuple[SimCarry, WindowMetrics]:
+    """Run one window over a pre-assembled subround-major ingress ``sub``.
+
+    The processing half of :func:`window_step` (switch scheme pass, server
+    FIFOs, client accounting, next-window pending assembly).  Split out so
+    the cross-rack fabric can append spine-forwarded lanes to the ingress
+    before the rack pipeline runs; extra all-invalid lanes leave every
+    table update, stat and metric bit-identical (state updates are
+    mask-gated), which is what keeps the fabric's rack-local-fraction-1.0
+    mode bit-identical to this standalone path.  ``reqs`` is the window's
+    client batch (used for the offered-load metric only).
+    """
+    c = cfg
     pad_to = sub.op.shape[0] * sub.op.shape[1]
 
     window = jnp.float32(c.window_us)
@@ -360,6 +418,7 @@ def window_step(
         installs=installs,
         crn=crn,
         mismatches=clients.mismatches,
+        fwd=jnp.sum(to_server.astype(jnp.int32)),
     )
     new_carry = SimCarry(
         policy=policy,

@@ -12,8 +12,6 @@ from repro.kernels.hot_gather.ops import hot_gather
 from repro.kernels.hot_gather.ref import hot_gather_ref
 from repro.kernels.orbit_match.ops import orbit_match
 from repro.kernels.orbit_match.ref import orbit_match_ref
-from repro.kernels.orbit_pipeline.ops import orbit_pipeline
-from repro.kernels.orbit_pipeline.ref import orbit_pipeline_ref
 
 RNG = np.random.default_rng(42)
 
@@ -187,75 +185,73 @@ def test_hot_gather_all_misses():
 
 
 # ---------------------------------------------------------------------------
-# orbit_pipeline: fused match + admission
+# the admission slice of the fused subround vs the free-standing oracles
+# (folded here from the retired kernels.orbit_pipeline op's test suite)
 # ---------------------------------------------------------------------------
-def _pipeline_case(b, c, s, block_b, hot=False):
+def test_subround_admission_matches_enqueue_composition():
+    """The subround oracle's admission slice == orbit_match +
+    request_table.enqueue/apply_winners composed (the guarantee the retired
+    ``kernels.orbit_pipeline`` op used to carry)."""
+    from repro.core import request_table as rt
+    from repro.core.types import RequestTable
+    from repro.kernels.subround.ops import SubroundOuts
+    from repro.kernels.subround.ref import subround_ref
+
+    b, c, s = 96, 16, 4
     keys = jnp.asarray(RNG.choice(2000, c, replace=False), jnp.int32)
     table = hash128_u32(keys)
-    if hot:  # hit-heavy: queries drawn from the installed keys
-        occ = jnp.ones(c, jnp.int32)
-        val = jnp.ones(c, jnp.int32)
-        q = jnp.asarray(RNG.choice(np.asarray(keys), b), jnp.int32)
-    else:
-        occ = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
-        val = jnp.asarray(RNG.integers(0, 2, c), jnp.int32)
-        q = jnp.asarray(RNG.integers(0, 3000, b), jnp.int32)
+    occ = jnp.ones(c, jnp.int32)
+    val = jnp.ones(c, jnp.int32)
+    q = jnp.asarray(RNG.choice(np.asarray(keys), b), jnp.int32)
     hq = hash128_u32(q)
     mask = jnp.asarray(RNG.integers(0, 2, b), jnp.int32)
     qlen = jnp.asarray(RNG.integers(0, s + 1, c), jnp.int32)
     rear = jnp.asarray(RNG.integers(0, s, c), jnp.int32)
-    return hq, table, occ, val, mask, qlen, rear
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    zeros = jnp.zeros(b, jnp.int32)
 
+    # wreq/inst gates off: the subround reduces to match + admission + serve
+    got = SubroundOuts(*subround_ref(
+        hq, mask, zeros, zeros, zeros, jnp.ones(b, jnp.int32), lanes, lanes,
+        lanes, lanes, lanes, lanes.astype(jnp.float32),
+        table, occ, val, jnp.zeros(c, jnp.int32),
+        jnp.full(c * s, -1, jnp.int32), jnp.zeros(c * s, jnp.int32),
+        jnp.zeros(c * s, jnp.int32), jnp.zeros(c * s, jnp.float32),
+        jnp.zeros(c * s, jnp.int32), jnp.full(c * s, -1, jnp.int32),
+        qlen, jnp.zeros(c, jnp.int32), rear,
+        jnp.zeros(c, jnp.int32), jnp.full(c, -1, jnp.int32),
+        jnp.zeros(c, jnp.int32), jnp.zeros(c, jnp.int32),
+        jnp.ones(c, jnp.int32),
+        jnp.int32(0),  # zero budget: the serve round must not pop
+        queue_size=s, max_frags=1, max_serves=4))
 
-@pytest.mark.parametrize("b,c,s,block,hot", [
-    (24, 8, 4, 8, True),      # multi-tile, hit-heavy (overflows exercised)
-    (300, 16, 8, 64, True),
-    (64, 130, 8, 32, True),   # C > 128 (table pad)
-    (17, 5, 3, 8, False),     # B % block != 0 (batch pad)
-])
-def test_orbit_pipeline_kernel_matches_oracle(b, c, s, block, hot):
-    args = _pipeline_case(b, c, s, block, hot)
-    got = orbit_pipeline(*args, s, block_b=block)
-    want = orbit_pipeline_ref(*args, s)
-    names = ("cidx", "hit", "vhit", "pop", "accepted", "overflow",
-             "new_counts", "writer", "written")
-    for name, g, w in zip(names, got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
-                                      err_msg=f"{name} (b={b}, c={c})")
-
-
-def test_orbit_pipeline_matches_enqueue_composition():
-    """The fused op == orbit_match + request_table.enqueue composed."""
-    from repro.core import request_table as rt
-    from repro.core.types import RequestTable
-
-    b, c, s = 96, 16, 4
-    args = _pipeline_case(b, c, s, 32, hot=True)
-    hq, table, occ, val, mask, qlen, rear = args
-    cidx, hit, vhit, pop, acc, ovf, newc, writer, written = \
-        orbit_pipeline_ref(*args, s)
     m_cidx, m_hit, m_vhit, m_pop = orbit_match_ref(hq, table, occ, val, mask)
-    np.testing.assert_array_equal(np.asarray(cidx), np.asarray(m_cidx))
-    np.testing.assert_array_equal(np.asarray(pop), np.asarray(m_pop))
+    np.testing.assert_array_equal(np.asarray(got.pop), np.asarray(m_pop))
+    np.testing.assert_array_equal(np.asarray(got.hit),
+                                  np.asarray(m_hit).astype(np.int32))
 
     tbl = RequestTable(
         client=jnp.full(c * s, -1, jnp.int32), seq=jnp.zeros(c * s, jnp.int32),
         port=jnp.zeros(c * s, jnp.int32), ts=jnp.zeros(c * s, jnp.float32),
         acked=jnp.zeros(c * s, jnp.int32), kidx=jnp.full(c * s, -1, jnp.int32),
         qlen=qlen, front=jnp.zeros(c, jnp.int32), rear=rear)
-    lanes = jnp.arange(b, dtype=jnp.int32)
     want_mask = (mask > 0) & (m_hit > 0) & (m_vhit > 0)
     enq = rt.enqueue(tbl, jnp.where(m_cidx >= 0, m_cidx, 0), want_mask,
                      lanes, lanes, lanes, lanes.astype(jnp.float32),
                      kidx=lanes)
-    np.testing.assert_array_equal(np.asarray(acc), np.asarray(enq.accepted))
-    np.testing.assert_array_equal(np.asarray(ovf), np.asarray(enq.overflow))
-    applied = rt.apply_winners(tbl, writer, written, newc,
-                               lanes, lanes, lanes,
-                               lanes.astype(jnp.float32), kidx=lanes)
-    for got_leaf, want_leaf in zip(applied, enq.table):
+    np.testing.assert_array_equal(np.asarray(got.accepted),
+                                  np.asarray(enq.accepted).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.overflow),
+                                  np.asarray(enq.overflow).astype(np.int32))
+    for name, got_leaf, want_leaf in zip(
+            ("client", "seq", "port", "ts", "acked", "kidx", "qlen", "front",
+             "rear"),
+            (got.rt_client, got.rt_seq, got.rt_port, got.rt_ts, got.rt_acked,
+             got.rt_kidx, got.qlen, got.front, got.rear),
+            enq.table):
         np.testing.assert_array_equal(np.asarray(got_leaf),
-                                      np.asarray(want_leaf))
+                                      np.asarray(want_leaf),
+                                      err_msg=f"rt.{name}")
 
 
 def test_cms_fast_ref_matches_onehot_oracle():
@@ -311,10 +307,6 @@ def test_dispatch_matches_oracles_on_all_backends():
     want_match = orbit_match_ref(hq, table, occ, val, mask)
     widx = jnp.pad(rows_for(hq, 256), ((0, 0), (0, 0)))
     want_cms = cms_update_query_ref(widx, mask, counts, block_b=b)
-    s = 4
-    qlen = jnp.asarray(RNG.integers(0, s + 1, c), jnp.int32)
-    rear = jnp.asarray(RNG.integers(0, s, c), jnp.int32)
-    want_pipe = orbit_pipeline_ref(hq, table, occ, val, mask, qlen, rear, s)
     for be in ("ref", "interpret"):
         kernels.set_kernel_backend(be)
         try:
@@ -326,10 +318,6 @@ def test_dispatch_matches_oracles_on_all_backends():
                                           np.asarray(want_cms[0]))
             np.testing.assert_array_equal(np.asarray(ek),
                                           np.asarray(want_cms[1][:b]))
-            got_pipe = kernels.orbit_pipeline(hq, table, occ, val, mask,
-                                              qlen, rear, s)
-            for g, w in zip(got_pipe, want_pipe):
-                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
         finally:
             kernels.set_kernel_backend(None)
 
@@ -384,9 +372,9 @@ def _subround_case(b, c, s, f, budget):
     (300, 130, 8, 1, 8, 64, 25),  # C > 128 (table pad)
 ])
 def test_subround_kernel_matches_oracle(b, c, s, f, j, block, budget):
-    from repro.kernels.orbit_pipeline.ops import SubroundOuts
-    from repro.kernels.orbit_pipeline.ops import subround as subround_op
-    from repro.kernels.orbit_pipeline.ref import subround_ref
+    from repro.kernels.subround.ops import SubroundOuts
+    from repro.kernels.subround.ops import subround as subround_op
+    from repro.kernels.subround.ref import subround_ref
 
     args = _subround_case(b, c, s, f, budget)
     want = SubroundOuts(*subround_ref(
@@ -399,8 +387,8 @@ def test_subround_kernel_matches_oracle(b, c, s, f, j, block, budget):
 
 
 def test_subround_dispatch_matches_oracle_on_all_backends():
-    from repro.kernels.orbit_pipeline.ops import SubroundOuts
-    from repro.kernels.orbit_pipeline.ref import subround_ref
+    from repro.kernels.subround.ops import SubroundOuts
+    from repro.kernels.subround.ref import subround_ref
 
     b, c, s, f, j = 40, 16, 4, 2, 4
     args = _subround_case(b, c, s, f, 11)
@@ -426,8 +414,8 @@ def test_subround_ref_matches_composed_oracles():
     from repro.core import request_table as rt
     from repro.core import state_table as stt
     from repro.core.types import (OrbitMeta, RequestTable, StateTable)
-    from repro.kernels.orbit_pipeline.ops import SubroundOuts
-    from repro.kernels.orbit_pipeline.ref import subround_ref
+    from repro.kernels.subround.ops import SubroundOuts
+    from repro.kernels.subround.ref import subround_ref
 
     b, c, s, f, j = 48, 8, 4, 2, 4
     args = _subround_case(b, c, s, f, 13)

@@ -1,0 +1,180 @@
+"""Unit tests for the perf_smoke --check regression gate.
+
+The gate guards every PR's hot path, so the gate logic itself needs
+tests: baseline-median computation over comparable history entries,
+regressed-run flagging and exclusion (a failing branch retrying in CI
+must not vote its own regression into the baseline), warn-only behavior
+without same-host history, and the history-file append/migration path —
+all against tmp-path history files, no benchmark run involved.
+"""
+import json
+import os
+import sys
+
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.perf_smoke import (  # noqa: E402
+    append_history,
+    check_regression,
+    same_host_median,
+)
+
+
+def _run(host="hostA", wps=1000.0, points=16, windows=256,
+         jax_backend="cpu", kernel_backend="ref", regressed=None):
+    r = {
+        "host": host,
+        "config": {"points": points, "windows": windows},
+        "env": {"jax_backend": jax_backend, "kernel_backend": kernel_backend},
+        "batched": {"windows_per_s_best": wps},
+    }
+    if regressed is not None:
+        r["regressed"] = regressed
+    return r
+
+
+# ---------------------------------------------------------------------------
+# baseline median
+# ---------------------------------------------------------------------------
+def test_median_over_comparable_history():
+    hist = [_run(wps=900), _run(wps=1000), _run(wps=1100)]
+    assert same_host_median(hist, _run(wps=500)) == 1000
+
+
+def test_median_excludes_other_hosts_configs_and_backends():
+    cur = _run(wps=1000)
+    hist = [
+        _run(wps=100, host="hostB"),                 # other host
+        _run(wps=100, points=4),                     # other sweep width
+        _run(wps=100, windows=8),                    # other chunk length
+        _run(wps=100, jax_backend="tpu"),            # other jax backend
+        _run(wps=100, kernel_backend="interpret"),   # other kernel backend
+        _run(wps=1200),                              # the one comparable run
+    ]
+    assert same_host_median(hist, cur) == 1200
+
+
+def test_median_excludes_flagged_regressed_runs():
+    """A regressed branch retrying in CI cannot drag the baseline down."""
+    hist = [_run(wps=1000), _run(wps=200, regressed=True),
+            _run(wps=210, regressed=True), _run(wps=1100)]
+    assert same_host_median(hist, _run(wps=900)) == 1050
+
+
+def test_median_none_without_comparable_history():
+    assert same_host_median([], _run()) is None
+    assert same_host_median([_run(host="hostB")], _run()) is None
+
+
+def test_median_excludes_the_run_itself():
+    """The fresh run is appended before later gates read the file — it must
+    never be its own baseline."""
+    cur = _run(wps=100)
+    hist = [_run(wps=1000), cur]
+    assert same_host_median(hist, cur) == 1000
+
+
+# ---------------------------------------------------------------------------
+# the gate
+# ---------------------------------------------------------------------------
+def test_check_passes_within_threshold(capsys):
+    hist = [_run(wps=1000)] * 3
+    assert check_regression(hist, _run(wps=810)) == 0     # -19%: OK
+    assert "OK" in capsys.readouterr().out
+
+
+def test_check_fails_beyond_threshold(capsys):
+    hist = [_run(wps=1000)] * 3
+    assert check_regression(hist, _run(wps=790)) == 1     # -21%: gate trips
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_check_threshold_boundary():
+    hist = [_run(wps=1000)] * 3
+    assert check_regression(hist, _run(wps=800)) == 0     # exactly 0.8x: OK
+
+
+def test_check_warn_only_without_history(capsys):
+    """No same-host history: warn, never fail (cross-host numbers are not
+    comparable)."""
+    assert check_regression([], _run(wps=1)) == 0
+    out = capsys.readouterr().out
+    assert "warn only" in out
+    assert check_regression([_run(host="elsewhere", wps=10_000)],
+                            _run(wps=1)) == 0
+
+
+def test_check_recovers_after_excluded_regressions():
+    """History: good, then two flagged dips.  A recovered run passes against
+    the good median; an unflagged dip would have poisoned it."""
+    hist = [_run(wps=1000), _run(wps=300, regressed=True),
+            _run(wps=310, regressed=True)]
+    assert check_regression(hist, _run(wps=850)) == 0
+    assert check_regression(hist, _run(wps=500)) == 1
+
+
+# ---------------------------------------------------------------------------
+# history file append / migration (tmp-path)
+# ---------------------------------------------------------------------------
+def test_append_history_fresh_file(tmp_path):
+    out = tmp_path / "bench.json"
+    data = append_history(str(out), _run(wps=1.0))
+    assert len(data["history"]) == 1
+    assert data["latest"]["batched"]["windows_per_s_best"] == 1.0
+
+
+def test_append_history_accumulates(tmp_path):
+    out = tmp_path / "bench.json"
+    for i in range(3):
+        data = append_history(str(out), _run(wps=float(i)))
+        with open(out, "w") as f:
+            json.dump(data, f)
+    assert [h["batched"]["windows_per_s_best"] for h in data["history"]] \
+        == [0.0, 1.0, 2.0]
+    assert data["latest"]["batched"]["windows_per_s_best"] == 2.0
+
+
+def test_append_history_migrates_legacy_single_run(tmp_path):
+    """Pre-history files (one run at top level) become history entry 0."""
+    out = tmp_path / "bench.json"
+    legacy = _run(wps=42.0)
+    legacy["serial"] = {"windows_per_s_best": 40.0}
+    with open(out, "w") as f:
+        json.dump(legacy, f)
+    data = append_history(str(out), _run(wps=50.0))
+    assert len(data["history"]) == 2
+    assert data["history"][0]["batched"]["windows_per_s_best"] == 42.0
+
+
+def test_append_history_tolerates_corrupt_file(tmp_path):
+    out = tmp_path / "bench.json"
+    out.write_text("{not json")
+    data = append_history(str(out), _run(wps=7.0))
+    assert len(data["history"]) == 1
+
+
+def test_gate_end_to_end_over_tmp_history(tmp_path):
+    """The full --check flow against a tmp history file: append good runs,
+    then gate a regressed run (recorded + flagged), then confirm the flag
+    keeps it out of the next run's baseline."""
+    out = tmp_path / "bench.json"
+    for wps in (1000.0, 1050.0, 950.0):
+        data = append_history(str(out), _run(wps=wps))
+        with open(out, "w") as f:
+            json.dump(data, f)
+
+    with open(out) as f:
+        prior = json.load(f)["history"]
+    bad = _run(wps=400.0)
+    assert check_regression(prior, bad) == 1
+    bad["regressed"] = True
+    data = append_history(str(out), bad)
+    with open(out, "w") as f:
+        json.dump(data, f)
+
+    with open(out) as f:
+        prior = json.load(f)["history"]
+    good = _run(wps=900.0)
+    assert same_host_median(prior, good) == 1000.0  # dip excluded
+    assert check_regression(prior, good) == 0

@@ -4,7 +4,7 @@ The seed implementation did the lookup with ``lookup.lookup`` (pure [B, C]
 compare), a separate validity check, a scatter-add popularity update, and a
 free-standing ``rt.enqueue``; PR 1 fused the lookup slice into the
 ``orbit_match`` kernel; PR 2 fused match + admission into
-``kernels.orbit_pipeline``; this PR folds the ENTIRE subround — match,
+the fused pipeline op (retired since); this PR folds the ENTIRE subround — match,
 admission + metadata apply, state-table pass, orbit install, serving round
 — into ``kernels.subround``, a single ``pallas_call`` behind
 ``core.pipeline``, with orbit value bytes hoisted out of the per-subround
@@ -127,6 +127,7 @@ def _seed_switch_step(sw, pkts, recirc_packets, max_serves):
         n_served=n_served,
         bytes_served=bytes_served,
         n_crn=jnp.sum(crn.astype(jnp.int32)),
+        n_fwd=jnp.sum((to_server & valid).astype(jnp.int32)),
     )
     return sw3, swm.StepOutput(route=route, flag=flag_out, grid=grid,
                                stats=stats)
@@ -319,6 +320,7 @@ def _composed_window_step(cfg, server_cfg, client_cfg, key_size, wl, carry):
         installs=installs,
         crn=crn,
         mismatches=clients.mismatches,
+        fwd=jnp.sum(to_server.astype(jnp.int32)),
     )
     new_carry = sim_mod.SimCarry(
         policy=policy,
