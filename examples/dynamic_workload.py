@@ -2,6 +2,12 @@
 coldest keys; the control plane re-learns the hot set from count-min-sketch
 top-k reports and refetches cache packets within a couple of periods.
 
+With ``controller_period_s`` the cache updates run TRACED, inside the
+compiled period scan (``repro.core.controller.controller_step``) — the
+host only sees whole periods.  ``fleet.BatchedRackSimulator`` accepts the
+same argument to run churn sweeps vmapped (see
+``benchmarks.figures.fig18_dynamic_batched``).
+
     PYTHONPATH=src python examples/dynamic_workload.py
 """
 import os

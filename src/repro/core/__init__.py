@@ -24,4 +24,6 @@ from .pipeline import (  # noqa: F401
     window_pipeline,
 )
 from .switch import switch_step, StepOutput, StepStats  # noqa: F401
-from .controller import CacheController, ControllerConfig  # noqa: F401
+from .controller import (  # noqa: F401
+    CacheController, ControllerConfig, TracedUpdate, controller_step,
+)

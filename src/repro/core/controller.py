@@ -1,38 +1,61 @@
 """The switch control plane (paper §3.1, §3.8, §3.10).
 
-The controller is software (the paper's runs in Python on the switch CPU;
-ours runs on the host between jitted dataplane windows).  Responsibilities:
+Two implementations of the same cache-update pass:
+
+* :class:`CacheController` — the host-side numpy oracle (the paper's
+  controller runs in Python on the switch CPU).  Used for preloads and as
+  the bit-identity oracle for the traced pass.
+* :func:`controller_step` — a pure, jit/vmap-compatible version of the SAME
+  pass, so periodic cache updates can run *inside* the compiled window
+  scan (``repro.kvstore.simulator`` / ``fleet`` / ``fabric_sim``) instead
+  of as host-side surgery between chunks.  Bit-identical to the oracle
+  over any period (regression-tested in ``tests/test_controller.py``).
+
+Responsibilities (both implementations):
 
 * **Cache updates** — merge the data plane's per-key popularity counters
-  (cached keys) with the storage servers' top-k reports (uncached keys),
-  keep the ``active_size`` most popular keys, evict the rest, and issue
-  F-REQ fetches for newly inserted keys.  A new key *inherits the CacheIdx
-  of the key it evicts* (paper §3.8) — pending requests queued under that
-  index are served by the new cache packet and cleaned up by client-side
-  collision resolution.
-* **Counter reset** — popularity counters are read-and-reset each period so
-  they reflect only the recent window.
+  (cached keys) with the storage servers' top-k reports (uncached keys;
+  estimates for a key are SUMMED across reports — each server sees only
+  its shard's arrivals), keep the ``active_size`` most popular keys, evict
+  the rest, and issue F-REQ fetches for newly inserted keys.  A new key
+  *inherits the CacheIdx of the key it evicts* (paper §3.8) — pending
+  requests queued under that index are served by the new cache packet and
+  cleaned up by client-side collision resolution.  Ranking ties break by
+  smaller key id (a fixed total order keeps the two implementations
+  bit-identical).
+* **Counter reset** — the period accumulators (per-entry popularity AND
+  the §3.10 ``overflow`` / ``cached_reqs`` totals) are read-and-reset each
+  period so they reflect only the recent window; ``hits`` stays a
+  lifetime counter.
 * **Dynamic cache sizing** (§3.10) — compare the overflow-request ratio
   against a threshold (default 1%) and shrink/grow ``active_size`` within
-  ``[min_size, max_size]``.
+  ``[min_size, max_size]``.  A period with no cached requests holds the
+  size (no traffic is no evidence the cache is over- or under-sized).
 
-All state surgery is done host-side in numpy (control-plane rates are
-orders of magnitude below dataplane rates, as in the real system).
+Numerics: per-key scores accumulate in uint32 on the traced path and in
+Python ints on the host path — identical as long as a period's merged
+count for one key stays below 2**32, which the per-period reset
+guarantees at any realistic rate.  The sizing decision is evaluated in
+float32 on both paths.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import numpy as np
 
 import jax.numpy as jnp
 
-from .hashing import hash128_u32_np
-from .types import SwitchState
+from .hashing import hash128_u32, hash128_u32_np
+from .scatter_free import unique_writer
+from .types import COUNTER_DTYPE, OrbitBuffer, SwitchState
 
 
-@dataclass
+@dataclass(frozen=True)
 class ControllerConfig:
+    """Static controller parameters (hashable: part of jit cache keys)."""
+
     active_size: int = 128          # current #cached keys (<= lookup capacity)
     min_size: int = 32
     max_size: int = 512
@@ -51,8 +74,21 @@ class UpdateInfo:
     active_size: int = 0
 
 
+def _resize_decision(overflow, cached_reqs, threshold):
+    """Host-side float32 product-form sizing test.
+
+    ``ratio > threshold`` evaluated as ``overflow > threshold * cached`` so
+    neither path divides; :func:`_traced_resize` mirrors this expression
+    term-for-term in jnp (same float32 rounding, so the branch decision is
+    bit-compatible between numpy and jax — parity-tested).  Keep the two
+    in lockstep.
+    """
+    return (np.float32(overflow)
+            > np.float32(threshold) * np.float32(cached_reqs))
+
+
 class CacheController:
-    """Host-side cache-update controller."""
+    """Host-side cache-update controller (the traced pass's oracle)."""
 
     def __init__(self, cfg: ControllerConfig):
         self.cfg = cfg
@@ -60,10 +96,16 @@ class CacheController:
 
     # -- cache sizing -------------------------------------------------------
     def resize(self, overflow: int, cached_reqs: int) -> float:
-        """§3.10 dynamic sizing from the overflow-request ratio."""
+        """§3.10 dynamic sizing from the overflow-request ratio.
+
+        A zero-traffic period (``cached_reqs == 0``) holds the current
+        size: the ratio is 0/For-free then, and growing on it would let an
+        idle rack creep to ``max_size`` on no evidence.
+        """
         ratio = overflow / max(cached_reqs, 1)
-        if self.cfg.dynamic_sizing:
-            if ratio > self.cfg.overflow_threshold:
+        if self.cfg.dynamic_sizing and cached_reqs > 0:
+            if _resize_decision(overflow, cached_reqs,
+                                self.cfg.overflow_threshold):
                 self.active_size = max(self.cfg.min_size,
                                        self.active_size - self.cfg.size_step)
             else:
@@ -83,12 +125,15 @@ class CacheController:
 
         Args:
           sw: switch state (device).
-          reports: per-server (top_kidx, est_count) arrays for uncached keys.
+          reports: per-server (top_kidx, est_count) arrays for uncached
+            keys; a key reported by several servers scores the SUM of its
+            estimates (each server only sees its shard's arrivals).
           overflow/cached_reqs: period counts for dynamic sizing.
 
-        Returns the updated switch state and an UpdateInfo whose ``fetches``
-        must be turned into F-REQ packets by the caller (value fetching goes
-        through the data plane, §3.1).
+        Returns the updated switch state (period accumulators — popularity,
+        overflow, cached_reqs — reset to zero) and an UpdateInfo whose
+        ``fetches`` must be turned into F-REQ packets by the caller (value
+        fetching goes through the data plane, §3.1).
         """
         ratio = self.resize(overflow, cached_reqs)
         cap = sw.lookup.occupied.shape[0]
@@ -98,7 +143,9 @@ class CacheController:
         cached_kidx = np.asarray(sw.lookup.kidx)
         pop = np.asarray(sw.counters.popularity)
 
-        # Merge cached counts and server-reported candidates.
+        # Merge cached counts and server-reported candidates: sum a key's
+        # estimates across every report naming it (first-report-wins would
+        # under-rank keys whose traffic spreads over several servers).
         scores: dict[int, int] = {}
         for c in range(cap):
             if occ[c]:
@@ -106,10 +153,12 @@ class CacheController:
         for top_k, top_e in reports:
             for k, e in zip(np.asarray(top_k), np.asarray(top_e)):
                 k = int(k)
-                if k >= 0 and k not in scores:
-                    scores[k] = int(e)
+                if k >= 0:
+                    scores[k] = scores.get(k, 0) + int(e)
 
-        desired = sorted(scores, key=lambda k: -scores[k])[:active]
+        # Deterministic total order (score desc, key asc) — the tie-break
+        # the traced pass uses, so both implementations pick identical sets.
+        desired = sorted(scores, key=lambda k: (-scores[k], k))[:active]
         desired_set = set(desired)
         current = {int(cached_kidx[c]): c for c in range(cap) if occ[c]}
 
@@ -165,7 +214,9 @@ class CacheController:
             ),
             orbit=sw.orbit._replace(live=jnp.asarray(live)),
             counters=sw.counters._replace(
-                popularity=jnp.zeros_like(sw.counters.popularity)
+                popularity=jnp.zeros_like(sw.counters.popularity),
+                overflow=jnp.zeros((), COUNTER_DTYPE),
+                cached_reqs=jnp.zeros((), COUNTER_DTYPE),
             ),
         )
         info = UpdateInfo(
@@ -180,7 +231,258 @@ class CacheController:
     # -- bootstrap ----------------------------------------------------------
     def preload(self, sw: SwitchState, keys: np.ndarray) -> tuple[SwitchState, list[tuple[int, int]]]:
         """Install an initial hot set (benchmarks preload the hottest keys,
-        like the paper's evaluation).  Returns fetches for value loading."""
-        reports = [(np.asarray(keys, np.int32), np.full(len(keys), 1 << 20, np.int32))]
-        sw2, info = self.update(sw, reports)
+        like the paper's evaluation).  Returns fetches for value loading.
+
+        Estimates descend with position so the caller's hotness order
+        survives the (score desc, key asc) ranking even when ``keys`` is
+        longer than the active size."""
+        keys = np.asarray(keys, np.int32)
+        est = (1 << 20) - np.arange(len(keys), dtype=np.int32)
+        sw2, info = self.update(sw, [(keys, est)])
         return sw2, info.fetches
+
+
+# ---------------------------------------------------------------------------
+# the traced control plane (jit/vmap-compatible twin of CacheController)
+# ---------------------------------------------------------------------------
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+class TracedUpdate(NamedTuple):
+    """Fixed-width outputs of one :func:`controller_step` period.
+
+    ``fetch_*`` are the F-REQ lanes (rank-compacted: lane ``i`` is the
+    ``i``-th inserted key, exactly the host oracle's ``fetches`` order);
+    ``evicted_*`` the vacated/replaced keys in slot order.  Widths equal
+    the lookup capacity — a period can never insert or evict more than
+    ``cap`` keys.
+    """
+
+    fetch_kidx: jnp.ndarray     # int32[cap]  inserted keys (-1 pad)
+    fetch_cidx: jnp.ndarray     # int32[cap]  inherited CacheIdx per fetch
+    fetch_valid: jnp.ndarray    # bool[cap]
+    evicted_kidx: jnp.ndarray   # int32[cap]  evicted keys (-1 pad)
+    evicted_valid: jnp.ndarray  # bool[cap]
+    n_insert: jnp.ndarray       # int32[]
+    n_evict: jnp.ndarray        # int32[]
+    overflow_ratio: jnp.ndarray  # float32[] period overflow ratio (§3.10)
+
+
+def _traced_resize(cfg: ControllerConfig, active_size, overflow, cached_reqs):
+    """Traced twin of :meth:`CacheController.resize`.
+
+    The shrink test mirrors :func:`_resize_decision` term-for-term in jnp
+    float32 — keep the two expressions in lockstep."""
+    ovf = overflow.astype(jnp.float32)
+    cr = cached_reqs.astype(jnp.float32)
+    ratio = ovf / jnp.maximum(cr, 1.0)
+    if not cfg.dynamic_sizing:
+        return active_size, ratio
+    traffic = cached_reqs > 0
+    shrink = traffic & (ovf > jnp.float32(cfg.overflow_threshold) * cr)
+    grow = traffic & ~shrink
+    smaller = jnp.maximum(jnp.int32(cfg.min_size), active_size - cfg.size_step)
+    larger = jnp.minimum(jnp.int32(cfg.max_size), active_size + cfg.size_step)
+    return jnp.where(shrink, smaller,
+                     jnp.where(grow, larger, active_size)), ratio
+
+
+def _merge_scores(occ, cached_kidx, popularity, report_kidx, report_est):
+    """Merge cached popularity with server reports — the hot_gather path.
+
+    Every sum is an id-match contraction through ``kernels.hot_gather``
+    (the MXU-native gather-by-id), so the merge runs on the active kernel
+    backend like the rest of the data plane:
+
+      * per cached key, the summed estimate over every report lane naming
+        it;
+      * per report lane, the summed estimate over all lanes with its key
+        and whether the key is already cached.
+
+    Report lanes keep one *canonical* lane per distinct uncached key (the
+    first occurrence — a one-hot argmax reduction); the rest are masked.
+    Returns ``(cand_key int32[M], cand_score uint32[M])`` with ``M = cap +
+    n_report_lanes`` and masked lanes at ``(INT32_MAX, 0)``.
+    """
+    from repro import kernels as kn
+
+    rvalid = report_kidx >= 0
+    est = jnp.where(rvalid, report_est, 0).astype(jnp.int32)
+    # distinct sentinels so invalid lanes can never match anything
+    ids_cached = jnp.where(occ, cached_kidx, -3)
+    hot_report = jnp.where(rvalid, report_kidx, -2)
+    ids_report = jnp.where(rvalid, report_kidx, -3)
+    hot_cached = jnp.where(occ, cached_kidx, -2)
+
+    # cached keys: popularity + summed report estimates
+    rsum, _ = kn.hot_gather(ids_cached, hot_report, est[:, None])
+    cached_score = popularity + rsum[:, 0].astype(COUNTER_DTYPE)
+
+    # report lanes: summed estimate per key + already-cached filter
+    tot, _ = kn.hot_gather(ids_report, hot_report, est[:, None])
+    _, in_cache = kn.hot_gather(ids_report, hot_cached,
+                                jnp.zeros((occ.shape[0], 1), jnp.int32))
+    # canonical lane = first occurrence of its key among the report lanes
+    eq = (hot_report[:, None] == hot_report[None, :]) & rvalid[None, :]
+    n_r = report_kidx.shape[0]
+    first = jnp.argmax(eq, axis=1) == jnp.arange(n_r)
+    canonical = rvalid & first & ~(in_cache > 0)
+
+    cand_key = jnp.concatenate([
+        jnp.where(occ, cached_kidx, _I32_MAX),
+        jnp.where(canonical, report_kidx, _I32_MAX),
+    ])
+    cand_score = jnp.concatenate([
+        jnp.where(occ, cached_score, 0),
+        jnp.where(canonical, tot[:, 0].astype(COUNTER_DTYPE), 0),
+    ])
+    return cand_key, cand_score
+
+
+def controller_step(
+    sw: SwitchState,
+    report_kidx: jnp.ndarray,   # int32[Nr] candidate keys (-1 = empty lane)
+    report_est: jnp.ndarray,    # int32[Nr] per-lane popularity estimates
+    overflow: jnp.ndarray,      # uint32[]  period overflow count
+    cached_reqs: jnp.ndarray,   # uint32[]  period cached-request count
+    active_size: jnp.ndarray,   # int32[]   current size (carry scalar)
+    cfg: ControllerConfig,
+    *,
+    install_live: bool = False,
+    report_vlen: jnp.ndarray | None = None,  # int32[Nr], install_live only
+) -> tuple[SwitchState, jnp.ndarray, TracedUpdate]:
+    """One control-plane period as a pure traced function (paper §3.8/§3.10).
+
+    The jit/vmap twin of :meth:`CacheController.update` — same merge, same
+    (score desc, key asc) ranking, same CacheIdx inheritance, same counter
+    resets — built from the ``hot_gather`` kernel path and one-hot winner
+    reductions so it runs inside the compiled window scan.  Bit-identical
+    to the oracle on every output (``tests/test_controller.py``).
+
+    ``install_live=True`` is the spine-controller mode
+    (``repro.kvstore.fabric_sim``): there is no F-REQ path through the
+    spine, so inserted entries install immediately as live metadata-served
+    orbit lines (value length from ``report_vlen``), and kept entries that
+    a remote write invalidated are RE-validated with a version bump —
+    without this, a written spine entry would stay dead forever.
+
+    Returns ``(sw', active_size', TracedUpdate)``.
+    """
+    lk, st, orb = sw.lookup, sw.state, sw.orbit
+    cap = lk.occupied.shape[0]
+    f = orb.max_frags
+    occ = lk.occupied
+    ck = lk.kidx
+
+    # ---- §3.10 dynamic sizing (before selection, like the oracle) ---------
+    active_size, ratio = _traced_resize(cfg, active_size, overflow,
+                                        cached_reqs)
+    active = jnp.minimum(active_size, cap)
+
+    # ---- merge + rank: top-``active`` candidates --------------------------
+    cand_key, cand_score = _merge_scores(occ, ck, sw.counters.popularity,
+                                         report_kidx, report_est)
+    inv = jnp.uint32(0xFFFFFFFF) - cand_score
+    order = jnp.lexsort((cand_key, inv))   # score desc, key asc, pads last
+    dkey = cand_key[order][:cap]
+    dok = (jnp.arange(cap) < active) & (dkey != _I32_MAX)
+    dkey_m = jnp.where(dok, dkey, -2)
+
+    # ---- membership (one-hot; sentinels -2/-3 never cross-match) ----------
+    occ_key = jnp.where(occ, ck, -3)
+    keep = jnp.any(occ_key[:, None] == dkey_m[None, :], axis=1)
+    d_cached = jnp.any(dkey_m[:, None] == occ_key[None, :], axis=1) & dok
+
+    new_mask = dok & ~d_cached             # desired order == rank order
+    evict_mask = occ & ~keep
+    free_mask = ~occ
+
+    i32 = jnp.int32
+    new_rank = jnp.cumsum(new_mask.astype(i32)) - new_mask.astype(i32)
+    n_new = jnp.sum(new_mask.astype(i32))
+    # key/vlen of the j-th insert (one-hot winner over the rank axis)
+    rank_wr, rank_wn = unique_writer(jnp.where(new_mask, new_rank, cap),
+                                     new_mask, cap)
+    key_at_rank = jnp.where(rank_wn, dkey[rank_wr], -1)
+
+    # slot consumption order: evicted CacheIdx first (§3.8), then free slots
+    n_evict = jnp.sum(evict_mask.astype(i32))
+    ev_rank = jnp.cumsum(evict_mask.astype(i32)) - evict_mask.astype(i32)
+    fr_rank = n_evict + jnp.cumsum(free_mask.astype(i32)) - free_mask.astype(i32)
+    slot_rank = jnp.where(evict_mask, ev_rank, fr_rank)
+    assignable = evict_mask | free_mask
+    assigned = assignable & (slot_rank < n_new)
+    safe_rank = jnp.clip(slot_rank, 0, cap - 1)
+    slot_key = jnp.where(assigned, key_at_rank[safe_rank], -1)
+    vacated = evict_mask & ~assigned
+    changed = assigned | vacated
+
+    # ---- lookup / state updates -------------------------------------------
+    new_occ = (occ & keep) | assigned
+    new_kidx = jnp.where(assigned, slot_key,
+                         jnp.where(occ & keep, ck, -1))
+    new_hkeys = jnp.where(assigned[:, None], hash128_u32(slot_key), lk.hkeys)
+
+    if install_live:
+        # spine mode: installs go live immediately; kept-but-invalidated
+        # entries re-validate (the remote-write-forever-dead fix)
+        revalive = occ & keep & ~st.valid
+        touched = changed | revalive
+        new_valid = (st.valid & ~changed) | assigned | revalive
+    else:
+        revalive = jnp.zeros_like(occ)
+        touched = changed
+        new_valid = st.valid & ~changed
+    new_version = st.version + touched.astype(i32)
+
+    # ---- orbit lines -------------------------------------------------------
+    ent = jnp.repeat(jnp.arange(cap), f)
+    live2 = orb.live & ~changed[ent]
+    if install_live:
+        if report_vlen is None:
+            raise ValueError("install_live requires report_vlen")
+        rvlen = jnp.where(report_kidx >= 0, report_vlen, 0)
+        cand_vlen = jnp.concatenate([jnp.zeros((cap,), i32), rvlen])
+        dvlen = cand_vlen[order][:cap]
+        vlen_at_rank = jnp.where(rank_wn, dvlen[rank_wr], 0)
+        slot_vlen = jnp.where(assigned, vlen_at_rank[safe_rank], 0)
+        frag0 = (jnp.arange(cap * f) % f) == 0
+        a_line = assigned[ent] & frag0
+        r_line = revalive[ent] & frag0
+        orbit2 = orb._replace(
+            live=live2 | a_line | r_line,
+            kidx=jnp.where(a_line, slot_key[ent], orb.kidx),
+            version=jnp.where(a_line | r_line, new_version[ent], orb.version),
+            vlen=jnp.where(a_line, slot_vlen[ent], orb.vlen),
+            frags=jnp.where(assigned, 1, orb.frags),
+        )
+    else:
+        orbit2 = orb._replace(live=live2)
+
+    sw2 = sw._replace(
+        lookup=lk._replace(hkeys=new_hkeys, occupied=new_occ, kidx=new_kidx),
+        state=st._replace(valid=new_valid, version=new_version),
+        orbit=orbit2,
+        counters=sw.counters._replace(
+            popularity=jnp.zeros_like(sw.counters.popularity),
+            overflow=jnp.zeros((), COUNTER_DTYPE),
+            cached_reqs=jnp.zeros((), COUNTER_DTYPE),
+        ),
+    )
+
+    # ---- fixed-width F-REQ / eviction lanes -------------------------------
+    cidx_wr, cidx_wn = unique_writer(jnp.where(assigned, slot_rank, cap),
+                                     assigned, cap)
+    ev_wr, ev_wn = unique_writer(jnp.where(evict_mask, ev_rank, cap),
+                                 evict_mask, cap)
+    upd = TracedUpdate(
+        fetch_kidx=key_at_rank,
+        fetch_cidx=jnp.where(cidx_wn, cidx_wr.astype(i32), -1),
+        fetch_valid=rank_wn,
+        evicted_kidx=jnp.where(ev_wn, ck[ev_wr], -1),
+        evicted_valid=ev_wn,
+        n_insert=n_new,
+        n_evict=n_evict,
+        overflow_ratio=ratio,
+    )
+    return sw2, active_size, upd

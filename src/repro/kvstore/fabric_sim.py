@@ -66,7 +66,11 @@ from repro.baselines.netcache import init_netcache, netcache_install, netcache_s
 from repro.baselines.nocache import nocache_step
 from repro.core import fabric as fb
 from repro.core import pipeline
-from repro.core.controller import CacheController, ControllerConfig
+from repro.core.controller import (
+    CacheController,
+    ControllerConfig,
+    controller_step,
+)
 from repro.core.hashing import hash128_u32, hash128_u32_np, server_of_key
 from repro.core.types import (
     COUNTER_DTYPE,
@@ -79,11 +83,13 @@ from repro.core.types import (
 )
 
 from . import client as cl
+from .server import server_reports_traced
 from .simulator import (
     RackConfig,
     SimCarry,
     SimResult,
     build_fetch_batch,
+    controller_window_apply,
     init_carry,
     make_client_config,
     make_server_config,
@@ -113,6 +119,9 @@ class FabricConfig:
     spine_netcache_entries: int = 10_000   # netcache spine preload size
     spine_netcache_value_limit: int = 64
     spine_hop_us: float = 2.0       # one fabric traversal (each way)
+    spine_k_report: int = 16        # per-server report slice the global
+                                    # spine controller merges (bounds its
+                                    # candidate-dedup matrix at R*n_srv*k)
 
 
 class FabricCarry(NamedTuple):
@@ -297,6 +306,123 @@ def fabric_window_step(
     return new_carry, metrics
 
 
+def fabric_controller_apply(
+    cfg: RackConfig,
+    fcfg: FabricConfig,
+    ctrl_cfg: ControllerConfig,
+    spine_ctrl_cfg: ControllerConfig,
+    wl: WorkloadArrays,
+    carry: FabricCarry,
+    rack_active: jnp.ndarray,   # int32[R] per-rack active sizes
+    spine_active: jnp.ndarray,  # int32[]  spine active size
+) -> tuple[FabricCarry, jnp.ndarray, jnp.ndarray]:
+    """One traced control-plane period across the whole fabric.
+
+    Every rack's storage servers report their top-k (trackers reset), then
+
+    * each orbitcache ToR runs its own :func:`controller_step` (vmapped
+      over the rack axis) with F-REQ injection, exactly like a standalone
+      rack; and
+    * the **global spine controller** merges the per-rack reports — each
+      rack's keys re-keyed to their global identity ``kidx * R + home`` —
+      with the spine's own cached-key popularity and updates the spine
+      cache in ``install_live`` mode: there is no F-REQ path through the
+      spine (replies bypass it), so inserts go live immediately as
+      metadata-served lines, and kept entries that a remote write had
+      invalidated are re-validated (previously they stayed dead forever).
+
+    Reports are truncated to the spine controller's ``k_report`` per
+    server before the merge (they arrive estimate-sorted), bounding the
+    spine's candidate-dedup matrix.
+    """
+    r_fab = fcfg.n_racks
+    if cfg.scheme == "orbitcache":
+        # the standalone rack period boundary, vmapped over the rack axis
+        # — ONE implementation, so fabric racks can never drift from
+        # standalone racks
+        racks, rack_active, _upds, (top_k, top_e) = jax.vmap(
+            lambda c_i, a_i: controller_window_apply(cfg, ctrl_cfg, wl,
+                                                     c_i, a_i)
+        )(carry.racks, rack_active)
+    else:
+        # baseline ToRs have no cache to update; the spine still needs
+        # the per-rack server reports (trackers reset)
+        servers2, top_k, top_e = jax.vmap(
+            lambda s: server_reports_traced(s, ctrl_cfg.k_report)
+        )(carry.racks.servers)
+        racks = carry.racks._replace(servers=servers2)
+
+    if fcfg.spine_scheme == "orbitcache":
+        k_spine = min(spine_ctrl_cfg.k_report, ctrl_cfg.k_report)
+        tk = top_k[:, :, :k_spine]
+        te = top_e[:, :, :k_spine]
+        rid = jnp.arange(r_fab, dtype=jnp.int32)[:, None, None]
+        rv = tk >= 0
+        gk = jnp.where(rv, tk * r_fab + rid, -1)
+        gvlen = jnp.where(rv, wl.vlen[jnp.clip(tk, 0)], 0)
+        sp = carry.spine
+        sp2, spine_active, _upd = controller_step(
+            sp, gk.reshape(-1), te.reshape(-1),
+            sp.counters.overflow, sp.counters.cached_reqs, spine_active,
+            spine_ctrl_cfg, install_live=True,
+            report_vlen=gvlen.reshape(-1))
+        carry = carry._replace(spine=sp2)
+
+    return carry._replace(racks=racks), rack_active, spine_active
+
+
+def fabric_controller_chunk(cfg: RackConfig, fcfg: FabricConfig,
+                            ctrl_cfg: ControllerConfig,
+                            spine_ctrl_cfg: ControllerConfig,
+                            server_cfg, client_cfg, key_size: int,
+                            period_w: int, n_periods: int,
+                            vmapped: bool = False):
+    """Jitted fabric chunk of ``n_periods`` control-plane periods.
+
+    Period structure mirrors ``simulator.compiled_controller_chunk``:
+    ``period_w`` fabric windows, then :func:`fabric_controller_apply` —
+    all inside one compiled scan, with the per-rack and spine
+    ``active_size`` scalars carried alongside the fabric carry.
+    """
+    from repro.kernels import kernel_backend
+    return _fabric_controller_chunk(
+        replace(cfg, seed=0), replace(fcfg, local_frac=0.0), ctrl_cfg,
+        spine_ctrl_cfg, server_cfg, client_cfg, key_size, period_w,
+        n_periods, kernel_backend(), vmapped)
+
+
+@functools.lru_cache(maxsize=None)
+def _fabric_controller_chunk(cfg, fcfg, ctrl_cfg, spine_ctrl_cfg, server_cfg,
+                             client_cfg, key_size, period_w, n_periods,
+                             kernel_backend, vmapped):
+    def one(wl: WorkloadArrays, carry_i, ra_i, sa_i):
+        def step(c, x):
+            return fabric_window_step(cfg, fcfg, server_cfg, client_cfg,
+                                      key_size, wl, c, x)
+
+        def one_period(cas, _):
+            fc, ra, sa = cas
+            fc, ys = jax.lax.scan(step, fc, None, length=period_w)
+            fc, ra, sa = fabric_controller_apply(
+                cfg, fcfg, ctrl_cfg, spine_ctrl_cfg, wl, fc, ra, sa)
+            return (fc, ra, sa), ys
+
+        (fc, ra, sa), ys = jax.lax.scan(
+            one_period, (carry_i, ra_i, sa_i), None, length=n_periods)
+        metrics = jax.tree.map(
+            lambda a: a.reshape((n_periods * period_w,) + a.shape[2:]), ys)
+        return fc, ra, sa, metrics
+
+    def body(wl: WorkloadArrays, carry: FabricCarry, rack_active,
+             spine_active):
+        if vmapped:
+            return jax.vmap(one, in_axes=(None, 0, 0, 0))(
+                wl, carry, rack_active, spine_active)
+        return one(wl, carry, rack_active, spine_active)
+
+    return jax.jit(body, donate_argnums=(1,))
+
+
 def fabric_chunk(cfg: RackConfig, fcfg: FabricConfig, server_cfg, client_cfg,
                  key_size: int, n: int, vmapped: bool = False):
     """Jitted ``n``-window fabric chunk (donated carry, shared per config).
@@ -463,6 +589,10 @@ class FabricSimulator:
                 active_size=cfg.cache_entries, max_size=cfg.cache_entries))
             for _ in range(r)
         ]
+        self.spine_controller = CacheController(ControllerConfig(
+            active_size=fcfg.spine_cache_entries,
+            max_size=fcfg.spine_cache_entries,
+            k_report=fcfg.spine_k_report))
         racks = _tree_stack([
             init_carry(cfg, self.server_cfg, self.client_cfg,
                        wl.cfg.num_keys, wl.cfg.offered_rps,
@@ -552,17 +682,34 @@ class FabricSimulator:
         self.carry = carry
         return fabric_metrics_dict(ys)
 
+    def run_periods(self, n_periods: int, period_w: int) -> dict[str, np.ndarray]:
+        """Advance ``n_periods`` control-plane periods of ``period_w``
+        windows: per-rack ToR controllers AND the global spine controller
+        run inside the compiled scan (:func:`fabric_controller_apply`)."""
+        chunk = fabric_controller_chunk(
+            self.cfg, self.fcfg, self.controllers[0].cfg,
+            self.spine_controller.cfg, self.server_cfg, self.client_cfg,
+            self.key_size, period_w, n_periods)
+        ra = jnp.asarray([c.active_size for c in self.controllers],
+                         jnp.int32)
+        sa = jnp.asarray(self.spine_controller.active_size, jnp.int32)
+        carry, ra, sa, ys = chunk(self.wl.arrays, self.carry, ra, sa)
+        self.carry = carry
+        for i, c in enumerate(self.controllers):
+            c.active_size = int(ra[i])
+        self.spine_controller.active_size = int(sa)
+        return fabric_metrics_dict(ys)
+
     def run(self, sim_seconds: float, chunk_windows: int = 256,
-            ) -> FabricResult:
+            controller_period_s: float | None = None) -> FabricResult:
+        from .simulator import chunked_run, period_windows
         c = self.cfg
         total = int(round(sim_seconds / (c.window_us * 1e-6)))
-        total = max(chunk_windows, (total // chunk_windows) * chunk_windows)
-        traces: list[dict[str, np.ndarray]] = []
-        done = 0
-        while done < total:
-            n = min(chunk_windows, total - done)
-            traces.append(self.run_windows(n))
-            done += n
+        period_w = period_windows(controller_period_s, c.window_us)
+        has_ctrl = (c.scheme == "orbitcache"
+                    or self.fcfg.spine_scheme == "orbitcache")
+        traces = chunked_run(total, chunk_windows, period_w, has_ctrl,
+                             self.run_periods, self.run_windows)
         merged = {k: np.concatenate([t[k] for t in traces], axis=0)
                   for k in traces[0]}
         hist_sw = np.asarray(self.carry.racks.clients.hist_switch)
@@ -580,6 +727,7 @@ class FabricSimulator:
             res.racks.append(r)
         res.spine = dict(
             scheme=self.fcfg.spine_scheme,
+            active_size=self.spine_controller.active_size,
             remote=merged["spine_remote"],
             hits=merged["spine_hits"],
             served=merged["spine_served"],

@@ -52,6 +52,7 @@ from .simulator import (
     SimCarry,
     SimResult,
     build_fetch_batch,
+    controller_chunk_body,
     init_carry,
     make_client_config,
     make_server_config,
@@ -90,6 +91,35 @@ def _compiled_batched_chunk(cfg: RackConfig, server_cfg, client_cfg,
                                    wl_i, c, x)
             return jax.lax.scan(step, carry_i, None, length=n)
         return jax.vmap(one, in_axes=(wl_axes, 0))(wl, carry)
+
+    return jax.jit(body, donate_argnums=(1,))
+
+
+def compiled_batched_controller_chunk(cfg: RackConfig, ctrl_cfg,
+                                      server_cfg, client_cfg, key_size: int,
+                                      period_w: int, n_periods: int,
+                                      wl_axes: WorkloadArrays):
+    """Vmapped twin of ``simulator.compiled_controller_chunk``: every sweep
+    point runs ``n_periods`` whole control-plane periods — windows AND the
+    traced cache update — inside one compiled scan, with ``active_size``
+    a per-point carry vector.  This is what makes batched Fig. 18 churn
+    sweeps possible: no host-side per-point state surgery between chunks.
+    """
+    from repro.kernels import kernel_backend
+    return _compiled_batched_controller_chunk(
+        replace(cfg, seed=0), ctrl_cfg, server_cfg, client_cfg, key_size,
+        period_w, n_periods, wl_axes, kernel_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_batched_controller_chunk(cfg, ctrl_cfg, server_cfg, client_cfg,
+                                       key_size, period_w, n_periods,
+                                       wl_axes, kernel_backend):
+    one = controller_chunk_body(cfg, ctrl_cfg, server_cfg, client_cfg,
+                                key_size, period_w, n_periods)
+
+    def body(wl: WorkloadArrays, carry: SimCarry, active_size):
+        return jax.vmap(one, in_axes=(wl_axes, 0, 0))(wl, carry, active_size)
 
     return jax.jit(body, donate_argnums=(1,))
 
@@ -174,8 +204,17 @@ class BatchedRackSimulator:
                        seeds[i])
             for i in range(n)
         ])
-        # Workloads are fixed for the fleet's lifetime (churn is a serial-
-        # simulator feature), so stack/share their leaves once up front.
+        # Stack/share workload leaves once up front; host-side churn
+        # (``Workload.hot_in_swap``) is picked up by ``refresh_workloads``.
+        self.refresh_workloads()
+
+    def refresh_workloads(self) -> None:
+        """Re-stack workload arrays after host-side churn (Fig. 18).
+
+        ``hot_in_swap`` mutates the rank permutation on the Workload
+        objects; the stacked device arrays are rebuilt here.  The
+        stacked-vs-shared axes normally come out unchanged (churn does not
+        change which points differ), so the compiled chunks are reused."""
         self._wl, self._wl_axes = self._wl_and_axes()
 
     # ---------------------------------------------------------- workload axes
@@ -269,23 +308,41 @@ class BatchedRackSimulator:
         self.carry = carry
         return {k: np.asarray(v) for k, v in ys._asdict().items()}
 
+    def run_periods(self, n_periods: int, period_w: int) -> dict[str, np.ndarray]:
+        """Advance every point ``n_periods`` control-plane periods of
+        ``period_w`` windows each, cache updates INSIDE the compiled scan
+        (per-point ``active_size`` is a carried vector — no host-side
+        per-point surgery).  Traces are [N, n_periods * period_w, ...]."""
+        chunk = compiled_batched_controller_chunk(
+            self.cfg, self.controllers[0].cfg, self.server_cfg,
+            self.client_cfg, self.key_size, period_w, n_periods,
+            self._wl_axes)
+        act = jnp.asarray([c.active_size for c in self.controllers],
+                          jnp.int32)
+        carry, act, ys, upds = chunk(self._wl, self.carry, act)
+        self.carry = carry
+        for i, c in enumerate(self.controllers):
+            c.active_size = int(act[i])
+        self._last_update = jax.tree.map(np.asarray, upds)
+        return {k: np.asarray(v) for k, v in ys._asdict().items()}
+
     def run(self, sim_seconds: float, chunk_windows: int = 256,
-            ) -> list[SimResult]:
+            controller_period_s: float | None = None) -> list[SimResult]:
         """Run every point for ``sim_seconds``; one SimResult per point.
 
-        Periodic control-plane updates are host-side per-point surgery and
-        are not batched here — preload the hot set instead (all fixed-cache
-        sweeps: Figs. 9, 13, 16).  Use RackSimulator for Fig. 18 churn.
+        With ``controller_period_s`` set on an orbitcache fleet, the run is
+        structured as whole periods and every point's cache updates happen
+        inside the jitted period scan (batched Fig. 18 churn sweeps);
+        otherwise the hot set stays as preloaded (all fixed-cache sweeps:
+        Figs. 9, 13, 16).
         """
+        from .simulator import chunked_run, period_windows
         c = self.cfg
         total = int(round(sim_seconds / (c.window_us * 1e-6)))
-        total = max(chunk_windows, (total // chunk_windows) * chunk_windows)
-        traces: list[dict[str, np.ndarray]] = []
-        done = 0
-        while done < total:
-            n = min(chunk_windows, total - done)
-            traces.append(self.run_windows(n))
-            done += n
+        period_w = period_windows(controller_period_s, c.window_us)
+        traces = chunked_run(total, chunk_windows, period_w,
+                             c.scheme == "orbitcache", self.run_periods,
+                             self.run_windows)
         merged = {k: np.concatenate([t[k] for t in traces], axis=1)
                   for k in traces[0]}
         hist_sw = np.asarray(self.carry.clients.hist_switch)
@@ -298,7 +355,8 @@ class BatchedRackSimulator:
             )
             res.hist_switch = hist_sw[i]
             res.hist_server = hist_srv[i]
-            res.info = dict(scheme=c.scheme, point=i)
+            res.info = dict(scheme=c.scheme, point=i,
+                            active_size=self.controllers[i].active_size)
             results.append(res)
         return results
 
@@ -381,6 +439,8 @@ class BatchedFabricSimulator:
 
     def _stack(self) -> None:
         self.carry = _tree_stack([s.carry for s in self._sims])
+        self._controllers = [s.controllers for s in self._sims]
+        self._spine_controllers = [s.spine_controller for s in self._sims]
         # the per-point carries are dead once stacked (and stale after the
         # first run) — drop them so device state isn't held twice
         self._sims = None
@@ -395,4 +455,29 @@ class BatchedFabricSimulator:
                              self.client_cfg, self.key_size, n, vmapped=True)
         carry, ys = chunk(self.wl.arrays, self.carry)
         self.carry = carry
+        return fabric_metrics_dict(ys)
+
+    def run_periods(self, n_periods: int, period_w: int) -> dict[str, np.ndarray]:
+        """Advance every fabric ``n_periods`` control-plane periods: all
+        per-rack ToR controllers and every point's global spine controller
+        run inside one vmapped compiled scan (active sizes carried as
+        [N, R] / [N] vectors)."""
+        if self.carry is None:
+            self._stack()
+        from .fabric_sim import fabric_controller_chunk, fabric_metrics_dict
+        chunk = fabric_controller_chunk(
+            self.cfg, self.fcfg, self._controllers[0][0].cfg,
+            self._spine_controllers[0].cfg, self.server_cfg,
+            self.client_cfg, self.key_size, period_w, n_periods,
+            vmapped=True)
+        ra = jnp.asarray([[c.active_size for c in ctrls]
+                          for ctrls in self._controllers], jnp.int32)
+        sa = jnp.asarray([s.active_size for s in self._spine_controllers],
+                         jnp.int32)
+        carry, ra, sa, ys = chunk(self.wl.arrays, self.carry, ra, sa)
+        self.carry = carry
+        for i, ctrls in enumerate(self._controllers):
+            for j, c in enumerate(ctrls):
+                c.active_size = int(ra[i, j])
+            self._spine_controllers[i].active_size = int(sa[i])
         return fabric_metrics_dict(ys)

@@ -223,13 +223,24 @@ def server_step(
     )
 
 
-def server_reports(st: ServerState, k: int):
-    """Host-side: per-server top-k report + tracker reset (paper §3.8)."""
+def server_reports_traced(st: ServerState, k: int,
+                          ) -> tuple[ServerState, jnp.ndarray, jnp.ndarray]:
+    """Per-server top-k report + tracker reset (paper §3.8), fully traced.
+
+    Returns ``(st', top_kidx int32[n_srv, k], top_est int32[n_srv, k])`` —
+    the jit/vmap form the in-scan controller consumes; the host-side
+    :func:`server_reports` is a thin wrapper over it, so both paths share
+    one ranking."""
     from repro.core.sketch import report_and_reset
     def _rep(tr):
         return report_and_reset(tr, k)
     fresh, top_k, top_e = jax.vmap(_rep)(st.tracker)
-    st2 = st._replace(tracker=fresh)
+    return st._replace(tracker=fresh), top_k, top_e
+
+
+def server_reports(st: ServerState, k: int):
+    """Host-side: per-server top-k report + tracker reset (paper §3.8)."""
+    st2, top_k, top_e = server_reports_traced(st, k)
     import numpy as np
     reports = [
         (np.asarray(top_k[s]), np.asarray(top_e[s]))

@@ -50,7 +50,12 @@ import jax.numpy as jnp
 
 from repro.baselines.netcache import init_netcache, netcache_install, netcache_step
 from repro.core import pipeline
-from repro.core.controller import CacheController, ControllerConfig
+from repro.core.controller import (
+    CacheController,
+    ControllerConfig,
+    TracedUpdate,
+    controller_step,
+)
 from repro.core.hashing import hash128_u32, server_of_key
 from repro.core.types import (
     OP_F_REQ,
@@ -64,7 +69,14 @@ from repro.core.types import (
 from repro.baselines.nocache import nocache_step
 
 from . import client as cl
-from .server import ServerConfig, ServerState, init_servers, server_reports, server_step
+from .server import (
+    ServerConfig,
+    ServerState,
+    init_servers,
+    server_reports,
+    server_reports_traced,
+    server_step,
+)
 from .workload import Workload, WorkloadArrays
 
 HDR_BYTES = pipeline.HDR_BYTES  # canonical definition lives with the budget model
@@ -221,6 +233,69 @@ def build_fetch_batch(cfg: RackConfig, vlen_table: jnp.ndarray,
             valid=fb.valid.at[:n].set(True),
         )
     return interleave(fb, cfg.subrounds)
+
+
+def traced_fetch_batch(cfg: RackConfig, vlen_table: jnp.ndarray,
+                       fetch_kidx: jnp.ndarray, fetch_valid: jnp.ndarray,
+                       ) -> PacketBatch:
+    """Traced twin of :func:`build_fetch_batch` for in-scan cache updates.
+
+    ``fetch_kidx``/``fetch_valid`` are the rank-compacted F-REQ lanes a
+    :func:`repro.core.controller.controller_step` emits; lanes beyond
+    ``fetch_lanes`` are dropped exactly like the host path truncates its
+    fetch list.  Empty lanes match :func:`~repro.core.types.empty_batch`
+    field-for-field, so the assembled ingress is indistinguishable from a
+    host-built one.
+    """
+    w = cfg.fetch_lanes
+    n = fetch_kidx.shape[0]
+    if n < w:
+        fetch_kidx = jnp.pad(fetch_kidx, (0, w - n), constant_values=-1)
+        fetch_valid = jnp.pad(fetch_valid, (0, w - n))
+    else:
+        fetch_kidx, fetch_valid = fetch_kidx[:w], fetch_valid[:w]
+    safe_k = jnp.where(fetch_valid, fetch_kidx, 0)
+    fb = empty_batch(w, cfg.value_pad)
+    fb = fb._replace(
+        op=jnp.where(fetch_valid, OP_F_REQ, fb.op),
+        kidx=jnp.where(fetch_valid, fetch_kidx, fb.kidx),
+        hkey=jnp.where(fetch_valid[:, None], hash128_u32(safe_k), fb.hkey),
+        vlen=jnp.where(fetch_valid, vlen_table[safe_k], fb.vlen),
+        server=jnp.where(fetch_valid,
+                         server_of_key(safe_k, cfg.num_servers), fb.server),
+        valid=fetch_valid,
+    )
+    return interleave(fb, cfg.subrounds)
+
+
+def controller_window_apply(
+    cfg: RackConfig,
+    ctrl_cfg: ControllerConfig,
+    wl: WorkloadArrays,
+    carry: SimCarry,
+    active_size: jnp.ndarray,
+) -> tuple[SimCarry, jnp.ndarray, TracedUpdate, tuple[jnp.ndarray, jnp.ndarray]]:
+    """One traced control-plane period boundary (orbitcache racks).
+
+    Pulls the per-server top-k reports (resetting the trackers), runs the
+    pure :func:`~repro.core.controller.controller_step` cache update over
+    the switch state's period counters, and queues the resulting F-REQs
+    for the next window — the in-scan form of
+    ``RackSimulator._control_plane_update``.  Returns ``(carry', active')``
+    plus the period's :class:`TracedUpdate` and the raw ``(top_kidx,
+    top_est)`` report arrays (the fabric's spine controller merges them
+    across racks).
+    """
+    servers, top_k, top_e = server_reports_traced(carry.servers,
+                                                  ctrl_cfg.k_report)
+    sw = carry.policy
+    sw2, active2, upd = controller_step(
+        sw, top_k.reshape(-1), top_e.reshape(-1),
+        sw.counters.overflow, sw.counters.cached_reqs, active_size, ctrl_cfg,
+    )
+    fetch = traced_fetch_batch(cfg, wl.vlen, upd.fetch_kidx, upd.fetch_valid)
+    return (carry._replace(policy=sw2, servers=servers, fetch=fetch),
+            active2, upd, (top_k, top_e))
 
 
 # ---------------------------------------------------------------------------
@@ -464,6 +539,139 @@ def _compiled_chunk(cfg: RackConfig, server_cfg: ServerConfig,
     return jax.jit(body, donate_argnums=(1,))
 
 
+def controller_chunk_body(cfg: RackConfig, ctrl_cfg: ControllerConfig,
+                          server_cfg: ServerConfig,
+                          client_cfg: cl.ClientConfig, key_size: int,
+                          period_w: int, n_periods: int):
+    """The period-structured scan body shared by the serial and vmapped
+    controller chunks: ``n_periods`` iterations of (``period_w`` windows,
+    one traced cache update).  No ``lax.cond`` — the update sits at a
+    static position, so the body vmaps over a rack axis unchanged.
+
+    Signature: ``(wl, carry, active_size) -> (carry', active', metrics,
+    TracedUpdate)`` with metrics flattened to a ``[n_periods * period_w,
+    ...]`` window axis and the update info stacked per period.
+    """
+    def body(wl: WorkloadArrays, carry: SimCarry, active_size: jnp.ndarray):
+        def step(c, x):
+            return window_step(cfg, server_cfg, client_cfg, key_size, wl, c, x)
+
+        def one_period(c_a, _):
+            carry, active = c_a
+            carry, ys = jax.lax.scan(step, carry, None, length=period_w)
+            carry, active, upd, _reports = controller_window_apply(
+                cfg, ctrl_cfg, wl, carry, active)
+            return (carry, active), (ys, upd)
+
+        (carry, active), (ys, upds) = jax.lax.scan(
+            one_period, (carry, active_size), None, length=n_periods)
+        metrics = jax.tree.map(
+            lambda a: a.reshape((n_periods * period_w,) + a.shape[2:]), ys)
+        return carry, active, metrics, upds
+
+    return body
+
+
+def compiled_controller_chunk(cfg: RackConfig, ctrl_cfg: ControllerConfig,
+                              server_cfg: ServerConfig,
+                              client_cfg: cl.ClientConfig, key_size: int,
+                              period_w: int, n_periods: int):
+    """Jitted chunk of ``n_periods`` control-plane periods (orbitcache).
+
+    The whole period loop — ``period_w`` windows THEN the traced cache
+    update (server reports, evict/insert, counter reset, F-REQ injection,
+    §3.10 sizing) — runs inside one compiled scan; the only host-visible
+    state between chunks is the carry and the ``active_size`` scalar.
+    Cache policy mirrors :func:`compiled_chunk` (seed normalized out,
+    kernel backend baked in).
+    """
+    from repro.kernels import kernel_backend
+    return _compiled_controller_chunk(
+        replace(cfg, seed=0), ctrl_cfg, server_cfg, client_cfg, key_size,
+        period_w, n_periods, kernel_backend())
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_controller_chunk(cfg, ctrl_cfg, server_cfg, client_cfg,
+                               key_size, period_w, n_periods,
+                               kernel_backend):
+    body = controller_chunk_body(cfg, ctrl_cfg, server_cfg, client_cfg,
+                                 key_size, period_w, n_periods)
+    return jax.jit(body, donate_argnums=(1,))
+
+
+def period_windows(controller_period_s: float | None,
+                   window_us: float) -> int | None:
+    """Control-plane period length in windows (None = no periodic
+    controller).  The one rounding rule every simulator's ``run()`` must
+    share — a cadence drift between the serial/batched/fabric drivers
+    would break their bit-identity guarantees."""
+    if not controller_period_s:
+        return None
+    return max(1, int(round(controller_period_s / (window_us * 1e-6))))
+
+
+def chunked_run(total_windows: int, chunk_windows: int,
+                period_w: int | None, use_traced_controller: bool,
+                run_periods_fn, run_windows_fn,
+                on_period=None) -> list[dict[str, np.ndarray]]:
+    """The one chunking driver behind every simulator's ``run()``.
+
+    Three modes:
+
+    * traced controller (``period_w`` set, the scheme has one): whole
+      periods through ``run_periods_fn`` — chunks of several periods, or
+      one period per chunk when ``on_period`` needs its per-period
+      host callback;
+    * ``period_w`` without a traced controller (baseline schemes): plain
+      window chunks aligned to the period so ``on_period`` keeps firing
+      on the same cadence (e.g. host-side churn in an apples-to-apples
+      Fig. 18 comparison);
+    * no period: window chunks rounded to whole chunks (one compilation
+      shared across sweep points and schemes).
+
+    Period modes run whole periods: the requested window count rounds to
+    the NEAREST multiple of ``period_w`` (minimum one period — a
+    controller run needs a full period of traffic), so the duration error
+    is bounded by half a period; the no-period mode likewise rounds to
+    whole chunks.  Rates normalize per window either way.  ``on_period``
+    receives the number of windows completed.  Returns the per-chunk
+    trace dicts.
+    """
+    traces: list[dict[str, np.ndarray]] = []
+    if period_w:
+        # One loop for both modes — a baseline scheme has no cache update
+        # to apply but gets the SAME whole-period duration rounding and
+        # on_period cadence, so cross-scheme comparisons at equal
+        # arguments simulate equal window counts.
+        total_periods = max(1, int(round(total_windows / period_w)))
+        periods_per_chunk = (1 if on_period
+                             else max(1, chunk_windows // period_w))
+        # shrink to a divisor of total_periods: every chunk then carries
+        # the same n_periods, so the (lru-cached, n_periods-keyed) scan
+        # compiles exactly once per run — a remainder chunk would compile
+        # the whole period scan a second time
+        while total_periods % periods_per_chunk:
+            periods_per_chunk -= 1
+        step = (run_periods_fn if use_traced_controller
+                else (lambda n_p, pw: run_windows_fn(n_p * pw)))
+        done_p = 0
+        while done_p < total_periods:
+            traces.append(step(periods_per_chunk, period_w))
+            done_p += periods_per_chunk
+            if on_period:
+                on_period(done_p * period_w)
+    else:
+        total = max(chunk_windows,
+                    (total_windows // chunk_windows) * chunk_windows)
+        done = 0
+        while done < total:
+            n = min(chunk_windows, total - done)
+            traces.append(run_windows_fn(n))
+            done += n
+    return traces
+
+
 @dataclass
 class SimResult:
     """Host-side aggregation of a run."""
@@ -603,6 +811,21 @@ class RackSimulator:
         self.carry = carry
         return {k: np.asarray(v) for k, v in ys._asdict().items()}
 
+    def run_periods(self, n_periods: int, period_w: int) -> dict[str, np.ndarray]:
+        """Advance ``n_periods`` control-plane periods of ``period_w``
+        windows each — cache updates run INSIDE the compiled scan (the
+        traced :func:`controller_window_apply`); the host only sees the
+        resulting carry and ``active_size``."""
+        chunk = compiled_controller_chunk(
+            self.cfg, self.controller.cfg, self.server_cfg, self.client_cfg,
+            self.key_size, period_w, n_periods)
+        act = jnp.asarray(self.controller.active_size, jnp.int32)
+        carry, act, ys, upds = chunk(self.wl.arrays, self.carry, act)
+        self.carry = carry
+        self.controller.active_size = int(act)
+        self._last_update = jax.tree.map(np.asarray, upds)
+        return {k: np.asarray(v) for k, v in ys._asdict().items()}
+
     def run(
         self,
         sim_seconds: float,
@@ -610,29 +833,22 @@ class RackSimulator:
         controller_period_s: float | None = None,
         on_period: Any = None,
     ) -> SimResult:
-        """Run the rack; optionally run control-plane updates periodically."""
+        """Run the rack; optionally run control-plane updates periodically.
+
+        With ``controller_period_s`` set on an orbitcache rack, the run is
+        structured as whole periods and the cache updates happen inside
+        the jitted period scan (no host-side surgery between chunks).
+        ``on_period(sim, windows_done)`` fires after every period for any
+        scheme (baseline schemes run plain window chunks on the period
+        cadence — there is just no cache update to apply)."""
         c = self.cfg
         total_windows = int(round(sim_seconds / (c.window_us * 1e-6)))
-        # Round to whole chunks so every scan has the same length (one
-        # compilation, reused across all sweep points and schemes).
-        total_windows = max(chunk_windows, (total_windows // chunk_windows) * chunk_windows)
-        period_w = (
-            int(round(controller_period_s / (c.window_us * 1e-6)))
-            if controller_period_s else None
+        period_w = period_windows(controller_period_s, c.window_us)
+        traces = chunked_run(
+            total_windows, chunk_windows, period_w,
+            c.scheme == "orbitcache", self.run_periods, self.run_windows,
+            on_period=(lambda w: on_period(self, w)) if on_period else None,
         )
-        traces: list[dict[str, np.ndarray]] = []
-        done = 0
-        since_period = 0
-        while done < total_windows:
-            n = min(chunk_windows, total_windows - done)
-            traces.append(self.run_windows(n))
-            done += n
-            since_period += n
-            if period_w and since_period >= period_w:
-                since_period = 0
-                self._control_plane_update()
-                if on_period:
-                    on_period(self, done)
         merged = {
             k: np.concatenate([t[k] for t in traces], axis=0)
             for k in traces[0]
@@ -644,7 +860,10 @@ class RackSimulator:
         return res
 
     def _control_plane_update(self) -> None:
-        """Cache update from switch counters + server top-k reports (§3.8)."""
+        """Host-side cache update (switch counters + server top-k reports,
+        §3.8) — the oracle form of :func:`controller_window_apply`, kept
+        for tests and host-driven experiments; production runs use the
+        traced in-scan path (:meth:`run_periods`)."""
         if self.cfg.scheme != "orbitcache":
             return
         servers, reports = server_reports(

@@ -7,6 +7,8 @@ forward lanes stay all-invalid, and the rack RNG streams are untouched.
 Everything else (one-hot lane exchange, locality draws, global-key homing,
 conservation of remote traffic through the spine) is unit-tested on top.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -283,3 +285,69 @@ def test_spine_preload_installs_global_hot_set():
     assert set(lk.tolist()) <= hot
     live = np.asarray(sw.orbit.live)
     assert live.sum() == 32  # one live fragment-0 line per entry
+
+
+def test_spine_controller_revalidates_written_entries():
+    """The preload-only spine decays under remote writes (entries
+    invalidate forever); the in-scan global spine controller re-validates
+    kept entries, refreshes their lines, and restores spine serving."""
+    wl = _small_wl(write_ratio=0.2)
+    cfg = dataclasses.replace(_small_cfg(), track_popularity=True,
+                              seed=1)
+    fcfg = FabricConfig(n_racks=2, local_frac=0.5,
+                        spine_scheme="orbitcache", spine_lanes=128,
+                        fwd_lanes=64, spine_cache_entries=32,
+                        spine_k_report=8)
+    sim = FabricSimulator(cfg, fcfg, wl)
+    sim.preload(warm_windows=8)
+
+    sim.run_windows(60)  # no controller: remote writes kill spine entries
+    sp = sim.carry.spine
+    valid_before = int(np.asarray(sp.state.valid).sum())
+    assert valid_before < 32, "write traffic should invalidate spine entries"
+
+    t = sim.run_periods(4, 15)
+    sp = sim.carry.spine
+    valid_after = int(np.asarray(sp.state.valid).sum())
+    assert valid_after > valid_before
+    # re-validated entries serve again: EVERY valid entry must be occupied
+    # with a live, version-current fragment-0 line (a revalidation that
+    # forgot to refresh the orbit line would leave the entry dead)
+    occ = np.asarray(sp.lookup.occupied)
+    live = np.asarray(sp.orbit.live).reshape(occ.shape[0], -1)[:, 0]
+    ver_ok = np.asarray(sp.orbit.version).reshape(occ.shape[0], -1)[:, 0] \
+        == np.asarray(sp.state.version)
+    valid = np.asarray(sp.state.valid)
+    assert (valid <= (occ & live & ver_ok)).all()
+    assert t["spine_served"][-15:].sum() > 0
+
+
+def test_spine_controller_learns_new_global_hot_keys():
+    """A spine smaller than the global head: the controller must install
+    reported keys it has never seen (live, metadata-served) under their
+    global identities."""
+    wl = _small_wl()
+    cfg = dataclasses.replace(_small_cfg(), track_popularity=True)
+    fcfg = FabricConfig(n_racks=2, local_frac=0.5,
+                        spine_scheme="orbitcache", spine_lanes=128,
+                        fwd_lanes=64, spine_cache_entries=16,
+                        spine_k_report=8)
+    sim = FabricSimulator(cfg, fcfg, wl)
+    # NO preload: the spine starts empty and must learn from rack reports
+    sim.run_periods(3, 20)
+    sp = sim.carry.spine
+    occ = np.asarray(sp.lookup.occupied)
+    assert occ.sum() > 0, "spine controller never installed anything"
+    gk = np.asarray(sp.lookup.kidx)[occ]
+    lk, home = gk // 2, gk % 2
+    assert set(home.tolist()) <= {0, 1}
+    # installed keys come from the workload head (server-report ranking)
+    hot = set(wl.hottest_keys(200).tolist())
+    assert set(lk.tolist()) <= hot
+    # installs are live metadata-served lines with per-key value lengths
+    f = sp.orbit.max_frags
+    lines = np.flatnonzero(occ) * f
+    assert np.asarray(sp.orbit.live)[lines].all()
+    np.testing.assert_array_equal(
+        np.asarray(sp.orbit.vlen)[lines],
+        np.asarray(wl.vlen)[lk])
