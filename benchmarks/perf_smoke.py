@@ -26,9 +26,11 @@ exists the check only warns — cross-host numbers are not comparable.
 Breakdown mode (``--breakdown``): times the window's stages in isolation
 (client generation, the fused switch ``window_pipeline``, the full
 ``window_step``) and prints a compiled-HLO summary of the measured chunk
-(instruction/fusion counts, custom calls — the fused-kernel count shows
-here on the Pallas backends), so a perf diff can be attributed to a stage
-before bisecting.
+via the shared ``repro.analysis.hlo`` tooling (instruction/fusion
+counts, custom calls — the fused-kernel count shows here on the Pallas
+backends — plus any scatter ops that survived XLA fusion outside the
+lint allowlist), so a perf diff can be attributed to a stage before
+bisecting.
 """
 from __future__ import annotations
 
@@ -149,13 +151,16 @@ def run_breakdown(sim, wl, reps: int = 30) -> dict:
     open-loop request generation + subround-major ingress assembly),
     ``switch_pipeline`` (the fused kernel-backed ``window_pipeline`` alone
     — the data plane), and ``full_window`` (everything incl.
-    servers/clients/routing).  The HLO summary counts instructions per
-    opcode in the compiled measured chunk; on the Pallas backends the
-    fused subround shows up as one custom call per subround.
+    servers/clients/routing).  The HLO summary (``analysis.hlo``) counts
+    instructions per opcode in the compiled measured chunk — on the
+    Pallas backends the fused subround shows up as one custom call per
+    subround — and reports scatter ops that survived XLA fusion, split
+    by the ``no-scatter`` lint allowlist.
     """
+    from repro.analysis.hlo import opcode_summary, scatter_instructions
+    from repro.analysis.rules import ALLOWLISTS
     from repro.core import pipeline
     from repro.kvstore import simulator as sim_mod
-    from repro.launch.hlo_analysis import parse_computations
 
     cfg, scfg, ccfg = sim.cfg, sim.server_cfg, sim.client_cfg
     carry = sim.carry
@@ -193,24 +198,41 @@ def run_breakdown(sim, wl, reps: int = 30) -> dict:
         print(f"breakdown,{name},{dt * 1e3:.3f},ms_per_window,"
               f"{frac:.2f},of_full_window", flush=True)
 
-    # compiled-HLO summary of the measured chunk
+    # compiled-HLO summary of the measured chunk (shared repro.analysis
+    # tooling — the same parse the lint subsystem runs on every PR)
     chunk = sim._chunk(8)
     hlo = chunk.lower(arrs, carry).compile().as_text()
-    counts: dict[str, int] = {}
-    comps = parse_computations(hlo)
-    for comp in comps.values():
-        for inst in comp.instructions:
-            counts[inst.opcode] = counts.get(inst.opcode, 0) + 1
-    top = sorted(counts.items(), key=lambda kv: -kv[1])[:10]
-    total = sum(counts.values())
-    print(f"hlo,total_instructions,{total},computations,{len(comps)},"
-          f"custom_calls,{counts.get('custom-call', 0)}", flush=True)
-    print("hlo_top," + ",".join(f"{op}:{n}" for op, n in top), flush=True)
+    summary = opcode_summary(hlo)
+    print(f"hlo,total_instructions,{summary.total},"
+          f"computations,{summary.computations},"
+          f"custom_calls,{summary.custom_calls}", flush=True)
+    print("hlo_top," + ",".join(f"{op}:{n}" for op, n in summary.top(10)),
+          flush=True)
+
+    # Scatters that survived XLA fusion in the compiled chunk.  The
+    # jaxpr-level no-scatter rule guards trace-time intent; this reports
+    # post-fusion reality, split by whether the originating site is on
+    # the reviewed allowlist — an unexpected scatter here is a hot-path
+    # perf bug even if lint passed (e.g. XLA failing to fuse a one-hot
+    # update back into an in-place form).
+    allowed = ALLOWLISTS["no-scatter"]
+    scatters = scatter_instructions(hlo)
+    unexpected = [s for s in scatters
+                  if not any(fn in s["source"] or fn in s["op_name"]
+                             for fn in allowed)]
+    print(f"hlo_scatters,{len(scatters)},surviving_fusion,"
+          f"{len(unexpected)},outside_allowlist", flush=True)
+    for s in unexpected:
+        print(f"hlo_scatter_unexpected,{s['opcode']},"
+              f"{s['op_name'] or s['name']},{s['source']}", flush=True)
     return {
         "stage_ms": {k: v * 1e3 for k, v in timings.items()},
-        "hlo": {"total_instructions": total, "computations": len(comps),
-                "custom_calls": counts.get("custom-call", 0),
-                "top_opcodes": dict(top)},
+        "hlo": {"total_instructions": summary.total,
+                "computations": summary.computations,
+                "custom_calls": summary.custom_calls,
+                "top_opcodes": dict(summary.top(10)),
+                "scatters": len(scatters),
+                "scatters_outside_allowlist": len(unexpected)},
     }
 
 

@@ -1,0 +1,38 @@
+"""Static-analysis lint subsystem for the data plane's structural invariants.
+
+The architecture's load-bearing guarantees — scatter-free hot path, exactly
+one ``pallas_call`` per subround, wrap-safe uint32 counters, donated
+in-place window carries, retrace-free sweeps over documented traced axes —
+were prose in ROADMAP.md plus one ad-hoc jaxpr walker in the test suite.
+This package makes them machine-checked:
+
+  * :mod:`repro.analysis.jaxpr_walk`  — shared jaxpr traversal utilities
+    (equation walker with scan-depth / source attribution, the
+    ``count_pallas_calls`` walker the regression tests use);
+  * :mod:`repro.analysis.hlo`         — post-compile checks on optimized
+    HLO text (opcode summary, donation aliasing, surviving scatters),
+    built on :mod:`repro.launch.hlo_analysis`'s parser;
+  * :mod:`repro.analysis.rules`       — the rule registry + per-rule
+    allowlists;
+  * :mod:`repro.analysis.entry_points`— the production entry points the
+    linter covers;
+  * :mod:`repro.analysis.lint`        — ``run_lint`` and the
+    ``python -m repro.analysis.lint`` CLI.
+
+See ``src/repro/analysis/README.md`` for each rule's rationale and the
+allowlisting procedure.
+"""
+from .findings import Finding, Severity
+from .jaxpr_walk import count_pallas_calls, walk_eqns
+from .lint import run_lint
+from .rules import ALLOWLISTS, RULES
+
+__all__ = [
+    "ALLOWLISTS",
+    "Finding",
+    "RULES",
+    "Severity",
+    "count_pallas_calls",
+    "run_lint",
+    "walk_eqns",
+]

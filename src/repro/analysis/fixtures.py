@@ -1,0 +1,116 @@
+"""Seeded-violation fixtures: deliberately broken traced code.
+
+``tests/test_lint.py`` runs every rule against these to prove the rules
+actually FIRE (and that the matching clean twin passes) — so the linter
+can't rot into a no-op while the tree stays green.  Nothing here is
+production code; the violations are the exact footguns the rules exist
+to catch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .entry_points import EntryPoint
+
+
+# --- no-scatter: a scatter inside a scan body ------------------------------
+def scatterful_scan(xs):
+    def body(acc, i):
+        return acc.at[i].set(jnp.float32(i)), None   # per-lane scatter
+    out, _ = jax.lax.scan(body, xs, jnp.arange(4))
+    return out
+
+
+def scatter_free_scan(xs):
+    def body(acc, i):
+        oh = (jnp.arange(xs.shape[0]) == i)          # one-hot algebra
+        return jnp.where(oh, jnp.float32(i), acc), None
+    out, _ = jax.lax.scan(body, xs, jnp.arange(4))
+    return out
+
+
+# --- dtype-promotion: uint32 counter + int32 delta -------------------------
+def mixed_dtype_accumulate(acc_u32, delta_i32):
+    return acc_u32 + delta_i32                        # silently int32
+
+
+def explicit_dtype_accumulate(acc_u32, delta_i32):
+    from repro.core.types import sat_add
+    return sat_add(acc_u32, delta_i32)
+
+
+# --- no-dynamic-cond-in-scan: lax.cond inside a scan body ------------------
+def cond_in_scan(xs):
+    def body(acc, x):
+        acc = jax.lax.cond(x > 0, lambda a: a + x, lambda a: a - x, acc)
+        return acc, None
+    out, _ = jax.lax.scan(body, jnp.float32(0), xs)
+    return out
+
+
+def select_in_scan(xs):
+    def body(acc, x):
+        return jnp.where(x > 0, acc + x, acc - x), None
+    out, _ = jax.lax.scan(body, jnp.float32(0), xs)
+    return out
+
+
+# --- donation: a chunk that forgets donate_argnums -------------------------
+def _chunk_body(wl, carry):
+    def step(c, _):
+        return c + wl, None
+    return jax.lax.scan(step, carry, None, length=4)
+
+
+def undonated_chunk():
+    return jax.jit(_chunk_body)
+
+
+def donated_chunk():
+    return jax.jit(_chunk_body, donate_argnums=(1,))
+
+
+# --- retrace-guard: a "traced axis" that leaks into static structure -------
+def make_retracing_entry() -> EntryPoint:
+    """Length leaks into the scan trip count -> every sweep retraces."""
+    @jax.jit
+    def fn(x):
+        return x * 2.0
+
+    def thunk(n):
+        return (jnp.zeros((n,), jnp.float32),)
+
+    return EntryPoint(
+        "fixture.retracing", lambda: jax.make_jaxpr(fn)(*thunk(4)),
+        retrace=lambda: (fn, lambda: thunk(4), lambda: thunk(5), "width"))
+
+
+def make_stable_entry() -> EntryPoint:
+    @jax.jit
+    def fn(x):
+        return x * 2.0
+
+    def thunk(v):
+        return (jnp.full((4,), v, jnp.float32),)
+
+    return EntryPoint(
+        "fixture.stable", lambda: jax.make_jaxpr(fn)(*thunk(1.0)),
+        retrace=lambda: (fn, lambda: thunk(1.0), lambda: thunk(3.0),
+                         "value"))
+
+
+# --- EntryPoint wrappers for the jaxpr-rule fixtures -----------------------
+def entry_for(name: str, fn, *example_args) -> EntryPoint:
+    return EntryPoint(f"fixture.{name}",
+                      lambda: jax.make_jaxpr(fn)(*example_args))
+
+
+def entry_for_donation(name: str, make_fn) -> EntryPoint:
+    wl = jnp.ones((8,), jnp.float32)
+    carry = jnp.zeros((8,), jnp.float32)
+    fn = make_fn()
+    return EntryPoint(
+        f"fixture.{name}",
+        lambda: jax.make_jaxpr(fn)(wl, carry),
+        donation=lambda: (fn, (wl, carry)))

@@ -1,0 +1,95 @@
+"""Post-compile (optimized HLO) checks.
+
+jaxpr-level rules check *intent*; these check *reality* after XLA has
+fused, aliased, and rewritten everything.  All parsing rides
+:func:`repro.launch.hlo_analysis.parse_computations` so the lint
+subsystem and the perf harness share one HLO parser.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch.hlo_analysis import parse_computations
+
+_OP_NAME = re.compile(r'op_name="([^"]*)"')
+_SOURCE = re.compile(r'source_file="([^"]*)"(?:\s*source_line=(\d+))?')
+# one aliased (output, param) pair: every entry inside the compiled
+# module's input_output_alias={...} block carries an alias-kind marker
+_ALIAS_PAIR = re.compile(r"(?:must|may)-alias")
+# donation intent marker in lowered stablehlo (jax tags donated args)
+_DONATION_INTENT = re.compile(r"tf\.aliasing_output")
+
+
+@dataclass
+class OpcodeSummary:
+    counts: dict = field(default_factory=dict)  # opcode -> instruction count
+    total: int = 0
+    computations: int = 0
+
+    @property
+    def custom_calls(self) -> int:
+        return self.counts.get("custom-call", 0)
+
+    def top(self, n: int = 10) -> list[tuple[str, int]]:
+        return sorted(self.counts.items(), key=lambda kv: -kv[1])[:n]
+
+
+def opcode_summary(hlo: str) -> OpcodeSummary:
+    """Instruction counts per opcode over every computation."""
+    comps = parse_computations(hlo)
+    s = OpcodeSummary(computations=len(comps))
+    for comp in comps.values():
+        for inst in comp.instructions:
+            s.counts[inst.opcode] = s.counts.get(inst.opcode, 0) + 1
+            s.total += 1
+    return s
+
+
+def scatter_instructions(hlo: str) -> list[dict]:
+    """Scatter ops that SURVIVED XLA fusion, with source metadata.
+
+    Returns one record per instruction whose opcode starts with
+    ``scatter`` (or whose fused computation name marks it as a scatter
+    fusion root): ``{"opcode", "computation", "name", "op_name",
+    "source"}``.  ``op_name`` is XLA's jax-provided scope string (e.g.
+    ``jit(body)/.../scatter``) — match it against the allowlisted
+    function names to decide whether a survivor is expected.
+    """
+    out = []
+    for cname, comp in parse_computations(hlo).items():
+        for inst in comp.instructions:
+            if not inst.opcode.startswith("scatter"):
+                continue
+            m = _OP_NAME.search(inst.rest)
+            s = _SOURCE.search(inst.rest)
+            src = ""
+            if s:
+                src = s.group(1).rsplit("/", 1)[-1]
+                if s.group(2):
+                    src += f":{s.group(2)}"
+            out.append({
+                "opcode": inst.opcode,
+                "computation": cname,
+                "name": inst.name,
+                "op_name": m.group(1) if m else "",
+                "source": src,
+            })
+    return out
+
+
+def donation_intent(stablehlo: str) -> int:
+    """Number of argument buffers the traced program marks as donated."""
+    return len(_DONATION_INTENT.findall(stablehlo))
+
+
+def donation_honored(compiled_hlo: str) -> int:
+    """Number of (output, input) alias pairs in the compiled executable.
+
+    Donation the compiler actually kept shows up as
+    ``input_output_alias={ {0}: (1, {0}, may-alias), ... }`` on the entry
+    module; each pair is one buffer reused in place.
+    """
+    if "input_output_alias" not in compiled_hlo:
+        return 0
+    return len(_ALIAS_PAIR.findall(compiled_hlo))

@@ -1,0 +1,89 @@
+"""``run_lint`` and the ``python -m repro.analysis.lint`` CLI.
+
+The CLI traces all six production entry points, runs every registered
+rule, prints structured findings, and exits nonzero on any error-severity
+finding — wired into CI as its own job (interpret backend, so the
+kernel-path expectations are exercised without TPU hosts).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .entry_points import build_entry_points
+from .findings import Finding, Severity, errors
+from .rules import RULES
+
+
+def run_lint(entries=None, rules=None) -> list[Finding]:
+    """Run ``rules`` (default: all) over ``entries`` (default: all six).
+
+    Returns the findings; a rule that crashes yields an error finding
+    instead of aborting the sweep (a linter that dies on one entry checks
+    nothing on the rest).
+    """
+    if entries is None:
+        entries = build_entry_points()
+    rule_fns = [(n, RULES[n]) for n in (rules or RULES)]
+    findings: list[Finding] = []
+    for entry in entries:
+        for name, fn in rule_fns:
+            try:
+                findings.extend(fn(entry))
+            except Exception:
+                findings.append(Finding(
+                    rule=name, severity=Severity.ERROR, entry=entry.name,
+                    message="rule crashed:\n"
+                            + traceback.format_exc(limit=5),
+                ))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Lint the data plane's structural invariants "
+                    "(jaxpr + compiled-HLO rules).")
+    ap.add_argument("--entries", default=None,
+                    help="comma-separated entry-point names (default: all)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule names (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list rules and entry points, then exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("rules:")
+        for name, fn in RULES.items():
+            doc = (fn.__doc__ or "").strip().splitlines()[0]
+            print(f"  {name:24s} {doc}")
+        print("entry points:")
+        for e in build_entry_points():
+            print(f"  {e.name}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        unknown = set(rules) - set(RULES)
+        if unknown:
+            ap.error(f"unknown rules: {sorted(unknown)}")
+    entries = build_entry_points(
+        args.entries.split(",") if args.entries else None)
+
+    from repro.kernels import kernel_backend
+    print(f"repro.analysis.lint: {len(RULES) if not rules else len(rules)} "
+          f"rules x {len(entries)} entry points "
+          f"(kernel backend: {kernel_backend()})", flush=True)
+    findings = run_lint(entries, rules)
+    for f in findings:
+        print(f.format(), flush=True)
+    errs = errors(findings)
+    warns = len(findings) - len(errs)
+    print(f"repro.analysis.lint: {len(errs)} error(s), {warns} warning(s)",
+          flush=True)
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

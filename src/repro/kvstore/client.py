@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core.hashing import hash128_u32, server_of_key
 from repro.core.scatter_free import unique_writer
 from repro.core.types import (
+    COUNTER_DTYPE,
     OP_CRN_REQ,
     OP_R_REP,
     OP_R_REQ,
@@ -29,6 +30,7 @@ from repro.core.types import (
     OP_W_REQ,
     PacketBatch,
     empty_batch,
+    sat_add,
 )
 
 LAT_BUCKETS = 80
@@ -63,15 +65,25 @@ class ClientConfig(NamedTuple):
 
 
 class ClientState(NamedTuple):
+    """Per-fleet client bookkeeping.
+
+    The lifetime accumulators (``hist_*``, ``rx_*``, ``tx``,
+    ``mismatches``) run for the whole simulation and therefore live in
+    :data:`~repro.core.types.COUNTER_DTYPE` updated via
+    :func:`~repro.core.types.sat_add` — same wrap-safety rule as the
+    switch's ``Counters``.  ``next_seq``/``crn_*`` are transient window
+    state and stay int32.
+    """
+
     next_seq: jnp.ndarray     # int32[]
     crn_kidx: jnp.ndarray     # int32[crn_width] pending corrections
     crn_n: jnp.ndarray        # int32[]
-    hist_switch: jnp.ndarray  # int32[LAT_BUCKETS]
-    hist_server: jnp.ndarray  # int32[LAT_BUCKETS]
-    rx_switch: jnp.ndarray    # int32[] replies served by the switch cache
-    rx_server: jnp.ndarray    # int32[] replies served by storage servers
-    tx: jnp.ndarray           # int32[] requests issued
-    mismatches: jnp.ndarray   # int32[] wrong-key replies detected (-> CRN)
+    hist_switch: jnp.ndarray  # uint32[LAT_BUCKETS]
+    hist_server: jnp.ndarray  # uint32[LAT_BUCKETS]
+    rx_switch: jnp.ndarray    # uint32[] replies served by the switch cache
+    rx_server: jnp.ndarray    # uint32[] replies served by storage servers
+    tx: jnp.ndarray           # uint32[] requests issued
+    mismatches: jnp.ndarray   # uint32[] wrong-key replies detected (-> CRN)
 
 
 def init_clients(cfg: ClientConfig) -> ClientState:
@@ -79,12 +91,12 @@ def init_clients(cfg: ClientConfig) -> ClientState:
         next_seq=jnp.zeros((), jnp.int32),
         crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
         crn_n=jnp.zeros((), jnp.int32),
-        hist_switch=jnp.zeros((LAT_BUCKETS,), jnp.int32),
-        hist_server=jnp.zeros((LAT_BUCKETS,), jnp.int32),
-        rx_switch=jnp.zeros((), jnp.int32),
-        rx_server=jnp.zeros((), jnp.int32),
-        tx=jnp.zeros((), jnp.int32),
-        mismatches=jnp.zeros((), jnp.int32),
+        hist_switch=jnp.zeros((LAT_BUCKETS,), COUNTER_DTYPE),
+        hist_server=jnp.zeros((LAT_BUCKETS,), COUNTER_DTYPE),
+        rx_switch=jnp.zeros((), COUNTER_DTYPE),
+        rx_server=jnp.zeros((), COUNTER_DTYPE),
+        tx=jnp.zeros((), COUNTER_DTYPE),
+        mismatches=jnp.zeros((), COUNTER_DTYPE),
     )
 
 
@@ -173,7 +185,7 @@ def generate(
         next_seq=st.next_seq + b + cfg.crn_width,
         crn_kidx=jnp.full((cfg.crn_width,), -1, jnp.int32),
         crn_n=jnp.zeros((), jnp.int32),
-        tx=st.tx + n,
+        tx=sat_add(st.tx, n),
     )
     batch = jax.tree.map(lambda a, c: jnp.concatenate([a, c], axis=1), pk, crn)
     return st, batch
@@ -197,7 +209,7 @@ def account_switch_served(
     """
     lat = jnp.maximum(serve_time - ts, 0.05) + cfg.base_rtt_us
     bucket = jnp.where(served, lat_bucket(lat), LAT_BUCKETS)
-    hist = st.hist_switch + _bucket_counts(bucket.reshape(-1))
+    hist = sat_add(st.hist_switch, _bucket_counts(bucket.reshape(-1)))
     n_served = jnp.sum(served.astype(jnp.int32))
 
     expected = req_kidx
@@ -214,8 +226,8 @@ def account_switch_served(
     crn_n = jnp.minimum(st.crn_n + n_mism, cfg.crn_width)
     return st._replace(
         hist_switch=hist,
-        rx_switch=st.rx_switch + n_served,
-        mismatches=st.mismatches + n_mism,
+        rx_switch=sat_add(st.rx_switch, n_served),
+        mismatches=sat_add(st.mismatches, n_mism),
         crn_kidx=crn_kidx,
         crn_n=crn_n,
     )
@@ -236,8 +248,8 @@ def account_server_replies(
     is_rep = to_client & ((pkts.op == OP_R_REP) | (pkts.op == OP_W_REP)) & (pkts.port == 0)
     lat = jnp.maximum(now - pkts.ts, 0.05) + cfg.base_rtt_us
     bucket = jnp.where(is_rep, lat_bucket(lat), LAT_BUCKETS)
-    hist = st.hist_server + _bucket_counts(bucket)
+    hist = sat_add(st.hist_server, _bucket_counts(bucket))
     return st._replace(
         hist_server=hist,
-        rx_server=st.rx_server + jnp.sum(is_rep.astype(jnp.int32)),
+        rx_server=sat_add(st.rx_server, jnp.sum(is_rep.astype(jnp.int32))),
     )

@@ -242,9 +242,10 @@ def fabric_window_step(
             + client_cfg.base_rtt_us + 2.0 * hop
         bucket = jnp.where(srep_flat, cl.lat_bucket(lat), cl.LAT_BUCKETS)
         spine_clients = spine_clients._replace(
-            hist_switch=spine_clients.hist_switch + cl._bucket_counts(bucket),
-            rx_switch=spine_clients.rx_switch
-            + jnp.sum(srep_flat.astype(jnp.int32)),
+            hist_switch=sat_add(spine_clients.hist_switch,
+                                cl._bucket_counts(bucket)),
+            rx_switch=sat_add(spine_clients.rx_switch,
+                              jnp.sum(srep_flat.astype(jnp.int32))),
         )
         spine_hits = jnp.sum(n_hits)
         spine_served = jnp.sum(srep_flat.astype(jnp.int32))

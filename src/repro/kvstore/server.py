@@ -30,6 +30,7 @@ from repro.core.hashing import hash128_u32
 from repro.core.scatter_free import unique_writer
 from repro.core.sketch import PopularityTracker, init_tracker, track_fused
 from repro.core.types import (
+    COUNTER_DTYPE,
     OP_CRN_REQ,
     OP_F_REQ,
     OP_F_REP,
@@ -38,6 +39,7 @@ from repro.core.types import (
     OP_W_REP,
     OP_W_REQ,
     PacketBatch,
+    sat_add,
 )
 from .store import synth_value
 
@@ -68,8 +70,10 @@ class ServerState(NamedTuple):
     rear: jnp.ndarray     # int32[n_srv]
     key_version: jnp.ndarray   # int32[num_keys] store versions
     tracker: PopularityTracker  # batched: leading dim n_srv
-    served: jnp.ndarray   # int32[n_srv] cumulative
-    dropped: jnp.ndarray  # int32[n_srv] cumulative
+    # lifetime accumulators: COUNTER_DTYPE via sat_add (wrap-safe, like
+    # the switch's Counters)
+    served: jnp.ndarray   # uint32[n_srv] cumulative
+    dropped: jnp.ndarray  # uint32[n_srv] cumulative
 
 
 def init_servers(cfg: ServerConfig, num_keys: int) -> ServerState:
@@ -84,8 +88,8 @@ def init_servers(cfg: ServerConfig, num_keys: int) -> ServerState:
         rear=jnp.zeros(n, jnp.int32),
         key_version=jnp.zeros(num_keys, jnp.int32),
         tracker=tracker,
-        served=jnp.zeros(n, jnp.int32),
-        dropped=jnp.zeros(n, jnp.int32),
+        served=jnp.zeros(n, COUNTER_DTYPE),
+        dropped=jnp.zeros(n, COUNTER_DTYPE),
     )
 
 
@@ -130,7 +134,7 @@ def server_step(
         port=put(st.port, pkts.port), flag=put(st.flag, flag_in),
         vlen=put(st.vlen, pkts.vlen), ts=put(st.ts, pkts.ts),
         qlen=st.qlen + new_counts, rear=(st.rear + new_counts) % q,
-        dropped=st.dropped + dropped_now,
+        dropped=sat_add(st.dropped, dropped_now),
     )
 
     # ---- popularity tracking on arriving reads (CMS + candidates) ---------
@@ -215,7 +219,7 @@ def server_step(
         qlen=st.qlen - n_serve,
         front=(st.front + n_serve) % q,
         key_version=kv,
-        served=st.served + served_now,
+        served=sat_add(st.served, served_now),
     )
     return st, ServerStepOut(
         replies=replies, served_now=served_now, dropped_now=dropped_now,

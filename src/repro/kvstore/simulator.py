@@ -65,6 +65,7 @@ from repro.core.types import (
     PacketBatch,
     empty_batch,
     init_switch_state,
+    sat_add,
 )
 from repro.baselines.nocache import nocache_step
 
@@ -109,7 +110,8 @@ class RackConfig:
 class WindowMetrics(NamedTuple):
     tx: jnp.ndarray             # offered requests this window
     rx_switch: jnp.ndarray      # replies served by the switch
-    rx_server: jnp.ndarray      # replies delivered from servers
+    rx_server: jnp.ndarray      # uint32[] replies delivered from servers
+                                # (delta of the wrap-safe client counter)
     served: jnp.ndarray         # int32[n_srv] per-server serves
     dropped: jnp.ndarray        # int32[n_srv] per-server drops
     backlog: jnp.ndarray        # int32[n_srv]
@@ -437,8 +439,9 @@ def process_window(
         lat = jnp.full((pad_to,), 1.0, jnp.float32) + client_cfg.base_rtt_us
         bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
         clients = clients._replace(
-            hist_switch=clients.hist_switch + cl._bucket_counts(bucket),
-            rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
+            hist_switch=sat_add(clients.hist_switch, cl._bucket_counts(bucket)),
+            rx_switch=sat_add(clients.rx_switch,
+                              jnp.sum(switch_reply.astype(jnp.int32))),
         )
         rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
     else:  # nocache

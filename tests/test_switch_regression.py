@@ -269,8 +269,9 @@ def _composed_window_step(cfg, server_cfg, client_cfg, key_size, wl, carry):
         lat = jnp.full((pad_to,), 1.0, jnp.float32) + client_cfg.base_rtt_us
         bucket = jnp.where(switch_reply, cl.lat_bucket(lat), cl.LAT_BUCKETS)
         clients = clients._replace(
-            hist_switch=clients.hist_switch + cl._bucket_counts(bucket),
-            rx_switch=clients.rx_switch + jnp.sum(switch_reply.astype(jnp.int32)),
+            hist_switch=sat_add(clients.hist_switch, cl._bucket_counts(bucket)),
+            rx_switch=sat_add(clients.rx_switch,
+                              jnp.sum(switch_reply.astype(jnp.int32))),
         )
         rx_sw = jnp.sum(switch_reply.astype(jnp.int32))
     else:  # nocache
@@ -545,19 +546,10 @@ def test_fused_all_invalid_ingress(backend):
 
 # ---------------------------------------------------------------------------
 # structural guarantees: one pallas_call per subround; wrap-safe counters
+# (the walker lives in repro.analysis — the lint subsystem — so the
+# regression test and the linter can never disagree on what counts)
 # ---------------------------------------------------------------------------
-def _count_pallas_calls(jaxpr) -> int:
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                if isinstance(sub, jax.core.ClosedJaxpr):
-                    n += _count_pallas_calls(sub.jaxpr)
-                elif isinstance(sub, jax.core.Jaxpr):
-                    n += _count_pallas_calls(sub)
-    return n
+from repro.analysis import count_pallas_calls as _count_pallas_calls  # noqa: E402
 
 
 def test_subround_is_single_pallas_call():
